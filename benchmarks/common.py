@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: run configs, timing, CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+@dataclass(frozen=True)
+class BenchConfig:
+    quick: bool = True
+
+    @property
+    def episodes(self) -> int:
+        return 160 if self.quick else 400
+
+    @property
+    def warmup(self) -> int:
+        return 15 if self.quick else 30
+
+    @property
+    def eval_episodes(self) -> int:
+        return 15 if self.quick else 50
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def emit_csv_row(name: str, us_per_call: float, derived: str) -> None:
+    """Scaffold contract: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def smooth(xs, k: int = 10):
+    xs = np.asarray(xs, dtype=np.float64)
+    if len(xs) < k:
+        return xs
+    kern = np.ones(k) / k
+    return np.convolve(xs, kern, mode="valid")
+
+
+def episodes_to_reach(rewards, threshold: float) -> int:
+    """First episode whose smoothed reward crosses `threshold` (paper's
+    convergence-rate metric); len(rewards) if never."""
+    sm = smooth(rewards)
+    idx = np.argmax(sm >= threshold)
+    if sm[idx] < threshold:
+        return len(rewards)
+    return int(idx)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,105 @@
+"""Roofline aggregation: read experiments/dryrun/*.json and emit the
+per-(arch x shape x mesh) table used in EXPERIMENTS.md SRoofline, plus a
+kernel micro-benchmark (interpret-mode walltime is NOT a TPU number; it is
+recorded only to satisfy the CSV contract and catch regressions)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_csv_row, save_json
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs):
+    lines = [
+        "| arch | shape | mesh | ok | compute_s | memory_s | collective_s | dominant | useful | args GiB/dev | temps GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | - | - | - | - | - | - | - |"
+            )
+            continue
+        ro = r["roofline"]
+        m = r["memory"]
+        lines.append(
+            "| {a} | {s} | {me} | ok | {c:.3e} | {mm:.3e} | {k:.3e} | {d} | {u:.2f} | {ab:.2f} | {tb:.2f} |".format(
+                a=r["arch"], s=r["shape"], me=r["mesh"],
+                c=ro["compute_s"], mm=ro["memory_s"], k=ro["collective_s"],
+                d=ro["dominant"], u=ro["useful_ratio"],
+                ab=m["argument_bytes"] / 2**30, tb=m["temp_bytes"] / 2**30,
+            )
+        )
+    return "\n".join(lines)
+
+
+def main(bench=None, seed: int = 0):
+    recs = load_records()
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    emit_csv_row("roofline/records", 0.0, f"{n_ok}/{len(recs)} combos ok")
+    dominant_counts = {}
+    for r in recs:
+        if r.get("ok"):
+            d = r["roofline"]["dominant"]
+            dominant_counts[d] = dominant_counts.get(d, 0) + 1
+    emit_csv_row("roofline/dominants", 0.0, str(dominant_counts))
+    table = markdown_table(recs)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(table + "\n")
+    save_json("roofline_summary", {
+        "n_ok": n_ok, "n_total": len(recs), "dominant_counts": dominant_counts,
+    })
+
+    # kernel micro-bench (interpret mode; CPU walltime, regression canary only)
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import flash_attention, ssd_scan
+
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (1, 256, 4, 64))
+    kk = jax.random.normal(k, (1, 256, 2, 64))
+    v = jax.random.normal(k, (1, 256, 2, 64))
+    out = flash_attention(q, kk, v, interpret=True)
+    out.block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        flash_attention(q, kk, v, interpret=True).block_until_ready()
+    emit_csv_row("kernels/flash_attention_interp", (time.time() - t0) / 3 * 1e6,
+                 "B1 S256 H4/KH2 hd64 (CPU interpret mode)")
+
+    x = jax.random.normal(k, (1, 128, 2, 32))
+    dt = jax.nn.softplus(jax.random.normal(k, (1, 128, 2)))
+    a = -jnp.exp(jax.random.normal(k, (2,)) * 0.3)
+    b = jax.random.normal(k, (1, 128, 16))
+    c = jax.random.normal(k, (1, 128, 16))
+    y, _ = ssd_scan(x, dt, a, b, c, chunk=32, interpret=True)
+    y.block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        ssd_scan(x, dt, a, b, c, chunk=32, interpret=True)[0].block_until_ready()
+    emit_csv_row("kernels/ssd_scan_interp", (time.time() - t0) / 3 * 1e6,
+                 "B1 S128 H2 P32 N16 (CPU interpret mode)")
+    return {"n_ok": n_ok, "n_total": len(recs)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract) and saves
+full curves/tables under experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import BenchConfig, emit_csv_row
+
+ALL = [
+    "fig3_convergence",
+    "fig4_algorithms",
+    "fig5_monitoring",
+    "fig6_eavesdroppers",
+    "fig7_exploration",
+    "fig8_no_location",
+    "fig9_example",
+    "table_power",
+    "roofline",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated benchmark names")
+    ap.add_argument("--full", action="store_true", help="paper-scale episode counts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    bench = BenchConfig(quick=not args.full)
+    names = ALL if not args.only else [
+        n for n in ALL if any(n.startswith(o.strip()) for o in args.only.split(","))
+    ]
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    failures = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        try:
+            mod.main(bench, seed=args.seed)
+            emit_csv_row(f"{name}/walltime", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            emit_csv_row(f"{name}/walltime", (time.time() - t0) * 1e6, f"FAIL: {e}")
+    emit_csv_row("total/walltime", (time.time() - t_all) * 1e6,
+                 f"{len(names) - len(failures)}/{len(names)} benchmarks ok")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import load_pytree, save_pytree
+
+__all__ = ["save_pytree", "load_pytree"]

@@ -1,0 +1,22 @@
+"""Qwen2.5-3B [hf:Qwen/Qwen2.5-3B family card].
+
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936, QKV bias.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    arch_type="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151936,
+    activation="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-0.5B",
+)

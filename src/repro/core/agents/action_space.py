@@ -1,0 +1,84 @@
+"""Factored discrete action space with masking (paper's action-mask algorithm [30]).
+
+Heads: u (categorical U), size (categorical NBINS), decoys (U binary),
+p_tx / p_d (categorical over power levels). Joint log-prob / entropy are
+sums over heads; invalid entries are masked to -inf before sampling.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+def masked_logits(logits: Dict[str, jax.Array], masks: Dict[str, jax.Array]):
+    out = {}
+    out["u"] = jnp.where(masks["u"], logits["u"], NEG)
+    out["size"] = jnp.where(masks["size"], logits["size"], NEG)
+    # decoys: (..., U, 2); masking the 'on' column forces 'off'
+    dec = logits["decoys"]
+    off_on = jnp.stack([jnp.zeros_like(masks["decoys"], jnp.float32),
+                        jnp.where(masks["decoys"], 0.0, NEG)], axis=-1)
+    out["decoys"] = dec + off_on
+    out["p_tx"] = jnp.where(masks["p_tx"], logits["p_tx"], NEG)
+    out["p_d"] = jnp.where(masks["p_d"], logits["p_d"], NEG)
+    return out
+
+
+def sample(key, logits: Dict[str, jax.Array]):
+    ks = jax.random.split(key, 5)
+    return {
+        "u": jax.random.categorical(ks[0], logits["u"]),
+        "size": jax.random.categorical(ks[1], logits["size"]),
+        "decoys": jax.random.categorical(ks[2], logits["decoys"], axis=-1),
+        "p_tx": jax.random.categorical(ks[3], logits["p_tx"]),
+        "p_d": jax.random.categorical(ks[4], logits["p_d"]),
+    }
+
+
+def _cat_logp(logits, idx):
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(lp, idx[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+
+def log_prob(logits: Dict[str, jax.Array], action: Dict[str, jax.Array]):
+    lp = _cat_logp(logits["u"], action["u"])
+    lp += _cat_logp(logits["size"], action["size"])
+    lp += _cat_logp(logits["decoys"], action["decoys"]).sum(-1)
+    lp += _cat_logp(logits["p_tx"], action["p_tx"])
+    lp += _cat_logp(logits["p_d"], action["p_d"])
+    return lp
+
+
+def _cat_entropy(logits):
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(lp)
+    return -(p * jnp.where(p > 0, lp, 0.0)).sum(-1)
+
+
+def entropy(logits: Dict[str, jax.Array]):
+    h = _cat_entropy(logits["u"])
+    h += _cat_entropy(logits["size"])
+    h += _cat_entropy(logits["decoys"]).sum(-1)
+    h += _cat_entropy(logits["p_tx"])
+    h += _cat_entropy(logits["p_d"])
+    return h
+
+
+def onehot(action: Dict[str, jax.Array], dims: Dict[str, int]):
+    """Flatten an action into a single one-hot feature vector b(n)."""
+    parts = [
+        jax.nn.one_hot(action["u"], dims["u"]),
+        jax.nn.one_hot(action["size"], dims["size"]),
+        action["decoys"].astype(jnp.float32),
+        jax.nn.one_hot(action["p_tx"], dims["p_tx"]),
+        jax.nn.one_hot(action["p_d"], dims["p_d"]),
+    ]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def flat_dim(dims: Dict[str, int]) -> int:
+    return dims["u"] + dims["size"] + dims["decoys"] + dims["p_tx"] + dims["p_d"]

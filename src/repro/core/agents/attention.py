@@ -1,0 +1,53 @@
+"""Cross-attention over historical state-action pairs (paper Eq. 24).
+
+H = the last I observed (s, a) pairs; Q = W_Q [s(n); H], K = W_K H,
+V = W_V H; s'(n) = softmax(QK^T / sqrt(C)) V. We return the attended
+summary for the current-state query row concatenated with s(n), which is
+what the actor consumes.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init_dense
+
+
+def init_cross_attention(key, obs_dim: int, pair_dim: int, attn_dim: int = 64):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(pair_dim)
+    return {
+        "wq_s": jax.random.normal(k1, (obs_dim, attn_dim)) * (1.0 / math.sqrt(obs_dim)),
+        "wq_h": jax.random.normal(k2, (pair_dim, attn_dim)) * s,
+        "wk": jax.random.normal(k3, (pair_dim, attn_dim)) * s,
+        "wv": jax.random.normal(k4, (pair_dim, attn_dim)) * s,
+    }
+
+
+def cross_attention(params, obs, history, hist_mask=None):
+    """obs: (..., obs_dim); history: (..., I, pair_dim) newest-last.
+
+    hist_mask: (..., I) 1 = valid pair. Returns (..., attn_dim + obs_dim).
+    """
+    q_s = obs @ params["wq_s"]  # (..., C) current-state query
+    q_h = history @ params["wq_h"]  # (..., I, C) history queries (Eq. 24 Q)
+    k = history @ params["wk"]
+    v = history @ params["wv"]
+    c = k.shape[-1]
+    q = jnp.concatenate([q_s[..., None, :], q_h], axis=-2)  # (..., I+1, C)
+    scores = jnp.einsum("...qc,...ic->...qi", q, k) / math.sqrt(c)
+    if hist_mask is not None:
+        scores = jnp.where(hist_mask[..., None, :] > 0, scores, -1e9)
+    # guard: if no history at all, attention output is zeros
+    any_valid = (
+        (hist_mask.sum(-1, keepdims=True) > 0)
+        if hist_mask is not None
+        else jnp.ones(scores.shape[:-2] + (1,), bool)
+    )
+    w = jax.nn.softmax(scores, axis=-1)
+    attended = jnp.einsum("...qi,...ic->...qc", w, v)
+    s_prime = attended[..., 0, :]  # the current-state row
+    s_prime = jnp.where(any_valid, s_prime, jnp.zeros_like(s_prime))
+    return jnp.concatenate([obs, s_prime], axis=-1)

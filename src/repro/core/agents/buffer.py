@@ -1,0 +1,44 @@
+"""Replay buffer (host numpy, circular) for the off-policy agents."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, example: Dict[str, np.ndarray]):
+        self.capacity = capacity
+        self.size = 0
+        self.ptr = 0
+        self.store = {}
+        for k, v in example.items():
+            if isinstance(v, dict):
+                self.store[k] = {
+                    kk: np.zeros((capacity,) + np.shape(vv), np.asarray(vv).dtype)
+                    for kk, vv in v.items()
+                }
+            else:
+                self.store[k] = np.zeros((capacity,) + np.shape(v), np.asarray(v).dtype)
+
+    def add(self, item: Dict):
+        i = self.ptr
+        for k, v in item.items():
+            if isinstance(v, dict):
+                for kk, vv in v.items():
+                    self.store[k][kk][i] = np.asarray(vv)
+            else:
+                self.store[k][i] = np.asarray(v)
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch: int) -> Dict:
+        idx = rng.integers(0, self.size, size=batch)
+
+        def take(v):
+            if isinstance(v, dict):
+                return {kk: jnp.asarray(vv[idx]) for kk, vv in v.items()}
+            return jnp.asarray(v[idx])
+
+        return {k: take(v) for k, v in self.store.items()}

@@ -1,0 +1,157 @@
+"""DQN baseline (paper baseline d, [35]).
+
+Q-learning needs a FLAT discrete action space; the factored MHSL action
+space is flattened over (u, size, p_tx, p_d) and the decoy subset is fixed
+to the heuristic "all eligible devices" (the paper itself notes Q-learning
+struggles as the space grows - this mirrors that constraint honestly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agents.buffer import ReplayBuffer
+from repro.core.env import MHSLEnv, NBINS
+from repro.nn import init_mlp, mlp_apply
+from repro.optim import adamw
+from repro.optim.optimizers import apply_updates
+
+
+@dataclass(frozen=True)
+class DQNConfig:
+    hidden: int = 128
+    gamma: float = 0.95
+    lr: float = 3e-4
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_episodes: int = 100
+    batch: int = 128
+    buffer_size: int = 50_000
+    target_update: int = 200  # gradient steps between target syncs
+
+
+def flat_dims(env: MHSLEnv):
+    return (env.U, NBINS, env.num_power_levels, env.num_power_levels)
+
+
+def unflatten_action(idx, env: MHSLEnv, masks):
+    u_n, s_n, p_n, _ = flat_dims(env)
+    u = idx // (s_n * p_n * p_n)
+    rem = idx % (s_n * p_n * p_n)
+    size = rem // (p_n * p_n)
+    rem = rem % (p_n * p_n)
+    p_tx = rem // p_n
+    p_d = rem % p_n
+    return {
+        "u": u.astype(jnp.int32),
+        "size": size.astype(jnp.int32),
+        "decoys": masks["decoys"].astype(jnp.int32),  # heuristic: all eligible
+        "p_tx": p_tx.astype(jnp.int32),
+        "p_d": p_d.astype(jnp.int32),
+    }
+
+
+def flat_mask(env: MHSLEnv, masks):
+    u_n, s_n, p_n, _ = flat_dims(env)
+    m = (
+        masks["u"][:, None, None, None]
+        & masks["size"][None, :, None, None]
+        & masks["p_tx"][None, None, :, None]
+        & masks["p_d"][None, None, None, :]
+    )
+    return m.reshape(-1)
+
+
+def train_dqn(env: MHSLEnv, cfg: DQNConfig, episodes: int = 200, seed: int = 0):
+    from repro.core.agents.loops import TrainResult, _obs_hash
+
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    n_actions = int(np.prod(flat_dims(env)))
+    key, k0 = jax.random.split(key)
+    params = init_mlp(k0, [env.obs_dim, cfg.hidden, cfg.hidden, n_actions])
+    target = jax.tree.map(jnp.copy, params)
+    opt = adamw(cfg.lr)
+    opt_state = opt.init(params)
+
+    env_step = jax.jit(env.step)
+    env_observe = jax.jit(env.observe)
+    env_masks = jax.jit(env.action_masks)
+
+    @jax.jit
+    def q_values(params, obs):
+        return mlp_apply(params, obs)
+
+    @jax.jit
+    def update(params, target, opt_state, batch):
+        def loss_fn(params):
+            q = mlp_apply(params, batch["obs"])
+            qa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
+            qn = mlp_apply(target, batch["obs_next"])
+            qn = jnp.where(batch["mask_next"] > 0, qn, -1e9).max(-1)
+            tgt = batch["reward"] + cfg.gamma * (1 - batch["done"]) * qn
+            return jnp.mean((qa - jax.lax.stop_gradient(tgt)) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        ups, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, ups), opt_state, loss
+
+    result = TrainResult()
+    seen = set()
+    key, reset_key = jax.random.split(key)
+    grad_steps = 0
+    buf = None
+    for ep in range(episodes):
+        st = env.reset(reset_key)
+        eps = max(
+            cfg.eps_end,
+            cfg.eps_start
+            - (cfg.eps_start - cfg.eps_end) * ep / max(cfg.eps_decay_episodes, 1),
+        )
+        ep_r = ep_leak = ep_viol = 0.0
+        for t in range(env.episode_len):
+            obs = env_observe(st)
+            masks = env_masks(st)
+            seen.add(_obs_hash(obs))
+            fm = flat_mask(env, masks)
+            key, ka, ks = jax.random.split(key, 3)
+            if rng.random() < eps:
+                valid = np.flatnonzero(np.asarray(fm))
+                a_idx = int(rng.choice(valid))
+            else:
+                q = q_values(params, obs)
+                a_idx = int(jnp.argmax(jnp.where(fm, q, -1e9)))
+            action = unflatten_action(jnp.asarray(a_idx), env, masks)
+            st2, r, done, info = env_step(st, action, ks)
+            obs2 = env_observe(st2)
+            fm2 = flat_mask(env, env_masks(st2))
+            item = dict(
+                obs=np.asarray(obs, np.float32),
+                obs_next=np.asarray(obs2, np.float32),
+                a=np.int32(a_idx),
+                mask_next=np.asarray(fm2, np.float32),
+                reward=np.float32(r),
+                done=np.float32(done),
+            )
+            if buf is None:
+                buf = ReplayBuffer(cfg.buffer_size, item)
+            buf.add(item)
+            ep_r += float(r)
+            ep_leak += float(info["leak"])
+            ep_viol += float((st2.e_r <= 0) | (st2.t_r <= 0))
+            st = st2
+            if buf.size >= cfg.batch:
+                batch = buf.sample(rng, cfg.batch)
+                params, opt_state, loss = update(params, target, opt_state, batch)
+                grad_steps += 1
+                if grad_steps % cfg.target_update == 0:
+                    target = jax.tree.map(jnp.copy, params)
+        result.episode_reward.append(ep_r)
+        result.episode_leak.append(ep_leak)
+        result.episode_violation.append(ep_viol)
+        result.states_explored.append(len(seen))
+    result.params = params  # type: ignore[attr-defined]
+    return result

@@ -1,0 +1,94 @@
+"""Intrinsic Curiosity Module (paper §III-A.4, Eqs. 17-19, 22, 25-27).
+
+Components (all MLP+residual; the forward model also carries a GRU as in
+the paper's Fig. 2):
+  * feature extractor  phi(s)           (Eq. 17), sigmoid output so each
+    element lies in [0,1] (used by the Lemma-1 boundedness argument)
+  * forward dynamics   phi_hat(s') = f(phi(s), a)    (Eq. 18)
+  * inverse dynamics   p_hat(a | phi(s), phi(s'))    (Eq. 19), factored
+    over the action heads
+
+Losses: L_I (Eq. 25) cross-entropy, L_F (Eq. 26) 0.5 L2, L_E (Eq. 27)
+combined; intrinsic reward R_C (Eq. 22).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agents import action_space as A
+from repro.nn import (
+    gru_apply,
+    init_gru,
+    init_mlp,
+    init_residual_mlp,
+    mlp_apply,
+    residual_mlp_apply,
+)
+
+
+def init_icm(key, obs_dim: int, action_dims: Dict[str, int], feat_dim: int = 32,
+             hidden: int = 128):
+    adim = A.flat_dim(action_dims)
+    ks = jax.random.split(key, 5)
+    return {
+        "feat": init_residual_mlp(ks[0], obs_dim, hidden, 2, feat_dim),
+        "fwd_in": init_residual_mlp(ks[1], feat_dim + adim, hidden, 1, hidden),
+        "fwd_gru": init_gru(ks[2], hidden, feat_dim),
+        "inv": init_mlp(ks[3], [2 * feat_dim, hidden,
+                                sum_head_dims(action_dims)]),
+    }
+
+
+def sum_head_dims(action_dims: Dict[str, int]) -> int:
+    return (
+        action_dims["u"]
+        + action_dims["size"]
+        + 2 * action_dims["decoys"]
+        + action_dims["p_tx"]
+        + action_dims["p_d"]
+    )
+
+
+def features(params, obs):
+    """phi(s) in [0,1]^feat (Eq. 17)."""
+    return residual_mlp_apply(params["feat"], obs, final_act=jax.nn.sigmoid)
+
+
+def forward_model(params, phi, action_vec):
+    """phi_hat(s') (Eq. 18): MLP+residual encoder then GRU cell with phi as
+    the hidden state (output squashed to [0,1] like phi)."""
+    h = residual_mlp_apply(params["fwd_in"], jnp.concatenate([phi, action_vec], -1))
+    out = gru_apply(params["fwd_gru"], phi, h)
+    return jax.nn.sigmoid(out)
+
+
+def inverse_logits(params, phi, phi_next, action_dims):
+    raw = mlp_apply(params["inv"], jnp.concatenate([phi, phi_next], -1))
+    u, rest = jnp.split(raw, [action_dims["u"]], -1)
+    size, rest = jnp.split(rest, [action_dims["size"]], -1)
+    dec, rest = jnp.split(rest, [2 * action_dims["decoys"]], -1)
+    p_tx, p_d = jnp.split(rest, [action_dims["p_tx"]], -1)
+    return {
+        "u": u,
+        "size": size,
+        "decoys": dec.reshape(dec.shape[:-1] + (action_dims["decoys"], 2)),
+        "p_tx": p_tx,
+        "p_d": p_d,
+    }
+
+
+def icm_losses(params, obs, obs_next, action, action_vec, action_dims):
+    """Returns (L_I, L_F, R_C) for a batch (Eqs. 22, 25, 26)."""
+    phi = features(params, obs)
+    phi_next = features(params, obs_next)
+    phi_hat = forward_model(params, phi, action_vec)
+    l_f = 0.5 * jnp.sum((phi_hat - jax.lax.stop_gradient(phi_next)) ** 2, -1)
+    inv = inverse_logits(params, phi, phi_next, action_dims)
+    l_i = -A.log_prob(inv, action)  # cross-entropy with one-hot b(n)
+    r_c = 0.5 * jnp.sum(
+        (jax.lax.stop_gradient(phi_hat) - jax.lax.stop_gradient(phi_next)) ** 2, -1
+    )
+    return l_i.mean(), l_f.mean(), r_c

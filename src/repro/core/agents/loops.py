@@ -1,0 +1,198 @@
+"""Training loops: episode rollout + off-policy updates (Algorithm 1).
+
+Tracks the paper's figure metrics: accumulated reward per episode (Figs.
+3-4), information leaked (Figs. 5-6), and distinct states explored (Fig. 7,
+hash of the discretized observation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agents import action_space as A
+from repro.core.agents import sac as SAC
+from repro.core.agents.buffer import ReplayBuffer
+from repro.core.env import MHSLEnv
+
+
+def _obs_hash(obs: np.ndarray, bins: float = 4.0) -> int:
+    """Distinct-state counter (paper Fig. 7): the discrete plan structure
+    (assignment vector r, transmitter one-hot, phase) plus coarsely binned
+    budgets - continuous noise dims are excluded so the count reflects
+    genuinely new (assignment x budget-regime) states."""
+    o = np.asarray(obs)
+    discrete = o[3:]  # r, v one-hot, l_M, l_D, phase, n  (skip raw budgets)
+    head = np.round(o[:3] * bins)  # budget/progress coarse bins
+    return hash(tuple(np.round(discrete * bins).astype(np.int64).tolist())
+                + tuple(head.astype(np.int64).tolist()))
+
+
+@dataclass
+class TrainResult:
+    episode_reward: list = field(default_factory=list)
+    episode_leak: list = field(default_factory=list)
+    episode_violation: list = field(default_factory=list)
+    states_explored: list = field(default_factory=list)  # cumulative distinct
+    metrics: list = field(default_factory=list)
+
+
+def train_sac(
+    env: MHSLEnv,
+    cfg: SAC.SACConfig,
+    episodes: int = 200,
+    seed: int = 0,
+    warmup_episodes: int = 10,
+    resample_positions: bool = False,
+) -> TrainResult:
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    adims = env.action_dims
+    key, k0 = jax.random.split(key)
+    params = SAC.init_agent(k0, env.obs_dim, adims, cfg)
+    update, init_opt = SAC.make_update(adims, cfg)
+    opt_state = init_opt(params)
+
+    pair_dim = env.obs_dim + A.flat_dim(adims)
+    hist0 = np.zeros((cfg.hist_len, pair_dim), np.float32)
+
+    # example transition for buffer allocation
+    key, kr = jax.random.split(key)
+    st = env.reset(kr)
+    obs0 = np.asarray(env.observe(st), np.float32)
+    masks0 = {k: np.asarray(v) for k, v in env.action_masks(st).items()}
+    example = dict(
+        obs=obs0,
+        obs_next=obs0,
+        hist=hist0,
+        hist_mask=np.zeros((cfg.hist_len,), np.float32),
+        action={
+            "u": np.int32(0),
+            "size": np.int32(0),
+            "decoys": np.zeros((adims["decoys"],), np.int32),
+            "p_tx": np.int32(0),
+            "p_d": np.int32(0),
+        },
+        masks=masks0,
+        reward=np.float32(0),
+        done=np.float32(0),
+    )
+    buf = ReplayBuffer(cfg.buffer_size, example)
+
+    env_step = jax.jit(env.step)
+    env_observe = jax.jit(env.observe)
+    env_masks = jax.jit(env.action_masks)
+
+    result = TrainResult()
+    seen = set()
+    key, kpos = jax.random.split(key)
+    reset_key = kpos
+
+    for ep in range(episodes):
+        if resample_positions:
+            key, reset_key = jax.random.split(key)
+        st = env.reset(reset_key)
+        hist = hist0.copy()
+        hist_mask = np.zeros((cfg.hist_len,), np.float32)
+        ep_r, ep_leak, ep_viol = 0.0, 0.0, 0.0
+        for t in range(env.episode_len):
+            obs = env_observe(st)
+            masks = env_masks(st)
+            seen.add(_obs_hash(obs))
+            key, ka, ks = jax.random.split(key, 3)
+            if ep < warmup_episodes:
+                logits = {
+                    "u": jnp.where(masks["u"], 0.0, -1e9),
+                    "size": jnp.where(masks["size"], 0.0, -1e9),
+                    "decoys": jnp.stack(
+                        [jnp.zeros(adims["decoys"]),
+                         jnp.where(masks["decoys"], 0.0, -1e9)], -1
+                    ),
+                    "p_tx": jnp.zeros(adims["p_tx"]),
+                    "p_d": jnp.zeros(adims["p_d"]),
+                }
+                action = A.sample(ka, logits)
+            else:
+                action = SAC.select_action(
+                    params, ka, obs, jnp.asarray(hist), jnp.asarray(hist_mask),
+                    masks, adims, cfg,
+                )
+            st2, r, done, info = env_step(st, action, ks)
+            obs2 = env_observe(st2)
+            buf.add(
+                dict(
+                    obs=np.asarray(obs, np.float32),
+                    obs_next=np.asarray(obs2, np.float32),
+                    hist=hist.copy(),
+                    hist_mask=hist_mask.copy(),
+                    action={k: np.asarray(v) for k, v in action.items()},
+                    masks={k: np.asarray(v) for k, v in masks.items()},
+                    reward=np.float32(r),
+                    done=np.float32(done),
+                )
+            )
+            # roll history (newest last)
+            pair = np.concatenate(
+                [np.asarray(obs, np.float32),
+                 np.asarray(A.onehot(action, adims), np.float32)]
+            )
+            hist = np.roll(hist, -1, axis=0)
+            hist[-1] = pair
+            hist_mask = np.roll(hist_mask, -1)
+            hist_mask[-1] = 1.0
+            ep_r += float(r)
+            ep_leak += float(info["leak"])
+            ep_viol += float((st2.e_r <= 0) | (st2.t_r <= 0))
+            st = st2
+
+            if ep >= warmup_episodes and buf.size >= cfg.batch:
+                for _ in range(cfg.updates_per_step):
+                    batch = buf.sample(rng, cfg.batch)
+                    params, opt_state, m = update(params, opt_state, batch)
+
+        result.episode_reward.append(ep_r)
+        result.episode_leak.append(ep_leak)
+        result.episode_violation.append(ep_viol)
+        result.states_explored.append(len(seen))
+
+    result.params = params  # type: ignore[attr-defined]
+    return result
+
+
+def evaluate_sac(env: MHSLEnv, params, cfg: SAC.SACConfig, episodes: int = 20,
+                 seed: int = 1000) -> Dict[str, float]:
+    key = jax.random.PRNGKey(seed)
+    adims = env.action_dims
+    pair_dim = env.obs_dim + A.flat_dim(adims)
+    env_step = jax.jit(env.step)
+    env_observe = jax.jit(env.observe)
+    env_masks = jax.jit(env.action_masks)
+    tot_r, tot_leak = 0.0, 0.0
+    for ep in range(episodes):
+        key, kr = jax.random.split(key)
+        st = env.reset(kr)
+        hist = np.zeros((cfg.hist_len, pair_dim), np.float32)
+        hist_mask = np.zeros((cfg.hist_len,), np.float32)
+        for t in range(env.episode_len):
+            obs = env_observe(st)
+            masks = env_masks(st)
+            key, ka, ks = jax.random.split(key, 3)
+            action = SAC.select_action(
+                params, ka, obs, jnp.asarray(hist), jnp.asarray(hist_mask),
+                masks, adims, cfg,
+            )
+            st, r, done, info = env_step(st, action, ks)
+            pair = np.concatenate(
+                [np.asarray(obs, np.float32),
+                 np.asarray(A.onehot(action, adims), np.float32)]
+            )
+            hist = np.roll(hist, -1, axis=0)
+            hist[-1] = pair
+            hist_mask = np.roll(hist_mask, -1)
+            hist_mask[-1] = 1.0
+            tot_r += float(r)
+            tot_leak += float(info["leak"])
+    return {"reward": tot_r / episodes, "leak": tot_leak / episodes}

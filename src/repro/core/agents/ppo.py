@@ -1,0 +1,165 @@
+"""PPO baseline (paper baseline c, [34]).
+
+Standard clipped-objective PPO over the same factored masked action space,
+actor on the raw state (no CA, no ICM), V critic with GAE.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agents import action_space as A
+from repro.core.agents.icm import sum_head_dims
+from repro.core.agents.sac import _split_heads
+from repro.core.env import MHSLEnv
+from repro.nn import init_mlp, mlp_apply
+from repro.optim import adamw
+from repro.optim.optimizers import apply_updates
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    hidden: int = 128
+    gamma: float = 0.95
+    lam: float = 0.95
+    clip: float = 0.2
+    lr: float = 3e-4
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    episodes_per_batch: int = 8
+    epochs: int = 4
+
+
+def init_ppo(key, obs_dim: int, action_dims: Dict[str, int], cfg: PPOConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "actor": init_mlp(k1, [obs_dim, cfg.hidden, cfg.hidden, sum_head_dims(action_dims)]),
+        "critic": init_mlp(k2, [obs_dim, cfg.hidden, cfg.hidden, 1]),
+    }
+
+
+def ppo_logits(params, obs, masks, action_dims):
+    raw = mlp_apply(params["actor"], obs)
+    return A.masked_logits(_split_heads(raw, action_dims), masks)
+
+
+def make_ppo_update(action_dims, cfg: PPOConfig):
+    opt = adamw(cfg.lr)
+
+    def loss_fn(params, batch):
+        logits = ppo_logits(params, batch["obs"], batch["masks"], action_dims)
+        lp = A.log_prob(logits, batch["action"])
+        ratio = jnp.exp(lp - batch["logp_old"])
+        adv = batch["adv"]
+        unclipped = ratio * adv
+        clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * adv
+        pg = -jnp.mean(jnp.minimum(unclipped, clipped))
+        v = mlp_apply(params["critic"], batch["obs"])[..., 0]
+        vloss = jnp.mean((batch["ret"] - v) ** 2)
+        ent = jnp.mean(A.entropy(logits))
+        return pg + cfg.value_coef * vloss - cfg.entropy_coef * ent, (pg, vloss, ent)
+
+    @jax.jit
+    def update(params, opt_state, batch):
+        (loss, auxs), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        ups, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, ups)
+        return params, opt_state, {"loss": loss, "pg": auxs[0], "v": auxs[1], "ent": auxs[2]}
+
+    return update, opt.init
+
+
+def train_ppo(env: MHSLEnv, cfg: PPOConfig, episodes: int = 200, seed: int = 0):
+    from repro.core.agents.loops import TrainResult, _obs_hash
+
+    key = jax.random.PRNGKey(seed)
+    adims = env.action_dims
+    key, k0 = jax.random.split(key)
+    params = init_ppo(k0, env.obs_dim, adims, cfg)
+    update, opt_init = make_ppo_update(adims, cfg)
+    opt_state = opt_init(params)
+
+    env_step = jax.jit(env.step)
+    env_observe = jax.jit(env.observe)
+    env_masks = jax.jit(env.action_masks)
+
+    @jax.jit
+    def act(params, key, obs, masks):
+        logits = ppo_logits(params, obs, masks, adims)
+        action = A.sample(key, logits)
+        lp = A.log_prob(logits, action)
+        v = mlp_apply(params["critic"], obs)[..., 0]
+        return action, lp, v
+
+    result = TrainResult()
+    seen = set()
+    key, reset_key = jax.random.split(key)
+    traj = []
+    for ep in range(episodes):
+        st = env.reset(reset_key)
+        ep_r = ep_leak = ep_viol = 0.0
+        rows = []
+        for t in range(env.episode_len):
+            obs = env_observe(st)
+            masks = env_masks(st)
+            seen.add(_obs_hash(obs))
+            key, ka, ks = jax.random.split(key, 3)
+            action, lp, v = act(params, ka, obs, masks)
+            st2, r, done, info = env_step(st, action, ks)
+            rows.append(
+                dict(obs=np.asarray(obs), masks={k: np.asarray(m) for k, m in masks.items()},
+                     action={k: np.asarray(v_) for k, v_ in action.items()},
+                     logp_old=float(lp), v=float(v), r=float(r), done=float(done))
+            )
+            ep_r += float(r)
+            ep_leak += float(info["leak"])
+            ep_viol += float((st2.e_r <= 0) | (st2.t_r <= 0))
+            st = st2
+        # GAE for this episode
+        vs = np.array([row["v"] for row in rows] + [0.0])
+        rs = np.array([row["r"] for row in rows])
+        adv = np.zeros(len(rows))
+        g = 0.0
+        for t in reversed(range(len(rows))):
+            delta = rs[t] + cfg.gamma * vs[t + 1] - vs[t]
+            g = delta + cfg.gamma * cfg.lam * g
+            adv[t] = g
+        ret = adv + vs[:-1]
+        for row, a_, rt in zip(rows, adv, ret):
+            row["adv"] = a_
+            row["ret"] = rt
+        traj.extend(rows)
+
+        result.episode_reward.append(ep_r)
+        result.episode_leak.append(ep_leak)
+        result.episode_violation.append(ep_viol)
+        result.states_explored.append(len(seen))
+
+        if (ep + 1) % cfg.episodes_per_batch == 0:
+            batch = {
+                "obs": jnp.asarray(np.stack([r_["obs"] for r_ in traj])),
+                "masks": {
+                    k: jnp.asarray(np.stack([r_["masks"][k] for r_ in traj]))
+                    for k in traj[0]["masks"]
+                },
+                "action": {
+                    k: jnp.asarray(np.stack([r_["action"][k] for r_ in traj]))
+                    for k in traj[0]["action"]
+                },
+                "logp_old": jnp.asarray([r_["logp_old"] for r_ in traj]),
+                "adv": jnp.asarray(
+                    (np.array([r_["adv"] for r_ in traj]) - np.mean([r_["adv"] for r_ in traj]))
+                    / (np.std([r_["adv"] for r_ in traj]) + 1e-6)
+                ),
+                "ret": jnp.asarray([r_["ret"] for r_ in traj]),
+            }
+            for _ in range(cfg.epochs):
+                params, opt_state, m = update(params, opt_state, batch)
+            traj = []
+
+    result.params = params  # type: ignore[attr-defined]
+    return result

@@ -1,0 +1,203 @@
+"""ICM-CA soft actor-critic (paper §III, Algorithm 1).
+
+Follows the paper's (simplified, discrete) SAC: a V-network critic trained
+on TD targets (Eq. 28) and an entropy-regularized actor trained on the TD
+advantage (Eq. 29), with
+  * cross-attention state enhancement s'(n) (Eq. 24)   [use_ca]
+  * ICM intrinsic reward R_C with weight zeta (Eq. 23) [use_icm]
+  * action masking over the factored discrete action space.
+
+Ablations (paper baselines a/b) come from toggling use_icm / use_ca.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agents import action_space as A
+from repro.core.agents import icm as ICM
+from repro.core.agents.attention import cross_attention, init_cross_attention
+from repro.nn import init_mlp, mlp_apply
+from repro.optim import adamw
+from repro.optim.optimizers import apply_updates
+
+
+@dataclass(frozen=True)
+class SACConfig:
+    hidden: int = 128
+    feat_dim: int = 32
+    attn_dim: int = 64
+    hist_len: int = 4  # I in Eq. 24
+    gamma: float = 0.95
+    alpha: float = 0.03  # entropy weight (Eq. 29)
+    zeta: float = 0.3  # intrinsic-reward weight (Table I)
+    v_inv: float = 6.0  # v in Eq. 27 (Table I: 5-8)
+    eta_a: float = 1e-4  # actor lr (Table I)
+    eta_c: float = 3e-4  # critic lr (Table I)
+    eta_icm: float = 3e-4
+    batch: int = 128
+    buffer_size: int = 50_000
+    updates_per_step: int = 2
+    use_icm: bool = True
+    use_ca: bool = True
+
+
+def init_agent(key, obs_dim: int, action_dims: Dict[str, int], cfg: SACConfig):
+    ks = jax.random.split(key, 8)
+    pair_dim = obs_dim + A.flat_dim(action_dims)
+    actor_in = obs_dim + (cfg.attn_dim if cfg.use_ca else 0)
+    head_out = ICM.sum_head_dims(action_dims)
+    params = {
+        "actor": {
+            "trunk": init_mlp(ks[0], [actor_in, cfg.hidden, cfg.hidden]),
+            "heads": init_mlp(ks[1], [cfg.hidden, head_out]),
+        },
+        "critic": init_mlp(ks[2], [obs_dim, cfg.hidden, cfg.hidden, 1]),
+    }
+    if cfg.use_ca:
+        params["actor"]["ca"] = init_cross_attention(
+            ks[3], obs_dim, pair_dim, cfg.attn_dim
+        )
+    if cfg.use_icm:
+        params["icm"] = ICM.init_icm(ks[4], obs_dim, action_dims, cfg.feat_dim, cfg.hidden)
+    return params
+
+
+def _split_heads(raw, action_dims):
+    u, rest = jnp.split(raw, [action_dims["u"]], -1)
+    size, rest = jnp.split(rest, [action_dims["size"]], -1)
+    dec, rest = jnp.split(rest, [2 * action_dims["decoys"]], -1)
+    p_tx, p_d = jnp.split(rest, [action_dims["p_tx"]], -1)
+    return {
+        "u": u,
+        "size": size,
+        "decoys": dec.reshape(dec.shape[:-1] + (action_dims["decoys"], 2)),
+        "p_tx": p_tx,
+        "p_d": p_d,
+    }
+
+
+def actor_logits(params, obs, hist, hist_mask, masks, action_dims, cfg: SACConfig):
+    if cfg.use_ca:
+        x = cross_attention(params["actor"]["ca"], obs, hist, hist_mask)
+    else:
+        x = obs
+    h = mlp_apply(params["actor"]["trunk"], x, final_act=jax.nn.relu)
+    raw = mlp_apply(params["actor"]["heads"], h)
+    return A.masked_logits(_split_heads(raw, action_dims), masks)
+
+
+def critic_v(params, obs):
+    return mlp_apply(params["critic"], obs)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# update step
+# ---------------------------------------------------------------------------
+
+
+def make_update(action_dims, cfg: SACConfig):
+    opt_a = adamw(cfg.eta_a)
+    opt_c = adamw(cfg.eta_c)
+    opt_i = adamw(cfg.eta_icm)
+
+    def loss_critic(critic_params, params, batch, r_total):
+        p = dict(params)
+        p["critic"] = critic_params
+        v = critic_v(p, batch["obs"])
+        v_next = jax.lax.stop_gradient(critic_v(p, batch["obs_next"]))
+        target = r_total + cfg.gamma * (1.0 - batch["done"]) * v_next
+        return jnp.mean((target - v) ** 2)
+
+    def loss_actor(actor_params, params, batch, r_total):
+        p = dict(params)
+        p["actor"] = actor_params
+        logits = actor_logits(
+            p, batch["obs"], batch["hist"], batch["hist_mask"], batch["masks"],
+            action_dims, cfg,
+        )
+        lp = A.log_prob(logits, batch["action"])
+        ent = A.entropy(logits)
+        v = critic_v(p, batch["obs"])
+        v_next = critic_v(p, batch["obs_next"])
+        y = jax.lax.stop_gradient(
+            r_total + cfg.gamma * (1.0 - batch["done"]) * v_next - v
+        )
+        return -jnp.mean(lp * y + cfg.alpha * ent)
+
+    def loss_icm(icm_params, batch):
+        avec = A.onehot(batch["action"], action_dims)
+        l_i, l_f, _ = ICM.icm_losses(
+            icm_params, batch["obs"], batch["obs_next"], batch["action"], avec,
+            action_dims,
+        )
+        return l_f + cfg.v_inv * l_i, (l_i, l_f)
+
+    @jax.jit
+    def update(params, opt_state, batch):
+        # intrinsic reward (Eq. 22-23)
+        if cfg.use_icm:
+            avec = A.onehot(batch["action"], action_dims)
+            _, _, r_c = ICM.icm_losses(
+                params["icm"], batch["obs"], batch["obs_next"], batch["action"],
+                avec, action_dims,
+            )
+            # bound the curiosity bonus (raw 0.5*||phi-phi_hat||^2 can reach
+            # feat_dim/2 >> |env reward| and swamp the leakage signal)
+            r_total = batch["reward"] + cfg.zeta * jnp.tanh(r_c)
+        else:
+            r_c = jnp.zeros_like(batch["reward"])
+            r_total = batch["reward"]
+
+        lc, gc = jax.value_and_grad(loss_critic)(
+            params["critic"], params, batch, r_total
+        )
+        uc, oc = opt_c.update(gc, opt_state["critic"], params["critic"])
+        params = dict(params)
+        params["critic"] = apply_updates(params["critic"], uc)
+
+        la, ga = jax.value_and_grad(loss_actor)(params["actor"], params, batch, r_total)
+        ua, oa = opt_a.update(ga, opt_state["actor"], params["actor"])
+        params["actor"] = apply_updates(params["actor"], ua)
+
+        metrics = {"critic_loss": lc, "actor_loss": la, "r_c": r_c.mean()}
+        new_opt = {"critic": oc, "actor": oa}
+        if cfg.use_icm:
+            (li_total, (l_i, l_f)), gi = jax.value_and_grad(loss_icm, has_aux=True)(
+                params["icm"], batch
+            )
+            ui, oi = opt_i.update(gi, opt_state["icm"], params["icm"])
+            params["icm"] = apply_updates(params["icm"], ui)
+            new_opt["icm"] = oi
+            metrics.update(icm_inv_loss=l_i, icm_fwd_loss=l_f)
+        else:
+            new_opt["icm"] = opt_state["icm"]
+        return params, new_opt, metrics
+
+    def init_opt(params):
+        return {
+            "actor": opt_a.init(params["actor"]),
+            "critic": opt_c.init(params["critic"]),
+            "icm": opt_i.init(params["icm"]) if cfg.use_icm else (),
+        }
+
+    return update, init_opt
+
+
+@partial(jax.jit, static_argnames=("action_dims_t", "cfg"))
+def _select(params, key, obs, hist, hist_mask, masks, action_dims_t, cfg):
+    action_dims = dict(action_dims_t)
+    logits = actor_logits(params, obs, hist, hist_mask, masks, action_dims, cfg)
+    return A.sample(key, logits)
+
+
+def select_action(params, key, obs, hist, hist_mask, masks, action_dims, cfg):
+    return _select(
+        params, key, obs, hist, hist_mask, masks,
+        tuple(sorted(action_dims.items())), cfg,
+    )

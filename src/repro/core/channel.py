@@ -1,0 +1,109 @@
+"""Wireless channel model (paper §II-C, Eq. 5) + Table-I constants.
+
+TDMA links with Rayleigh fading; deceptive-signal devices appear as
+interference in the SINR of eavesdropped/legitimate links. All functions
+are jnp-pure and jittable so the RL environment can lax.scan over them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class NetworkConfig:
+    """Paper Table I defaults."""
+
+    num_devices: int = 6  # U
+    num_eaves: int = 2  # E
+    area_m: float = 800.0  # 800 x 800 m^2
+    bandwidth_hz: float = 1e6  # B = 1 MHz
+    noise_dbm_hz: float = -90.0  # N0
+    rayleigh_o: float = 1.0  # o
+    monitor_prob: float = 0.8  # q_e
+    gamma_t: float = 8.0  # per-iteration delay budget (s)
+    gamma_e: float = 75.0  # per-iteration energy budget (J)
+    f_cpu_hz: float = 5.5e9  # f^B, 4-7 GHz
+    omega_cycles_per_bit: float = 1e5  # omega^B, 1e4-1e6
+    lambda_f: float = 1.5e9  # lambda_f FLOPs-scale coefficient (Table I)
+    lambda_b: float = 1.5e9  # lambda_b
+    theta_chip: float = 1e-28  # vartheta_k energy coefficient
+    power_levels: tuple = (0.1, 0.2, 0.5, 1.0)  # discrete transmit powers (W)
+    max_split: int = 4  # S (number of sub-models incl. server)
+
+    @property
+    def noise_w(self) -> float:
+        # N0 * B in watts
+        return 10 ** (self.noise_dbm_hz / 10) * 1e-3 * self.bandwidth_hz
+
+
+def channel_gain(dist: Array, o: float = 1.0) -> Array:
+    """h = o * m^-2 (paper's distance-squared path loss)."""
+    return o / jnp.maximum(dist, 1.0) ** 2
+
+
+def data_rate(
+    p_tx: Array,
+    dist_tx_rx: Array,
+    interferer_p: Array,
+    interferer_dist_rx: Array,
+    net: NetworkConfig,
+) -> Array:
+    """Eq. 5: TDMA SINR rate with deceptive-signal interference.
+
+    interferer_p: (D,) powers of deceptive devices (0 for inactive).
+    interferer_dist_rx: (D,) distances from deceptive devices to receiver.
+    """
+    sig = p_tx * channel_gain(dist_tx_rx, net.rayleigh_o)
+    interf = jnp.sum(interferer_p * channel_gain(interferer_dist_rx, net.rayleigh_o))
+    sinr = sig / (interf + net.noise_w)
+    return net.bandwidth_hz * jnp.log2(1.0 + sinr)
+
+
+def tx_time(bits: Array, rate: Array) -> Array:
+    """Eqs. 6-7: transmission delay of `bits` at `rate`."""
+    return bits / jnp.maximum(rate, 1.0)
+
+
+IPC = 8.0  # FLOPs retired per cycle on the edge-device CPU model
+
+
+def compute_time_fwd(fwd_flops: Array, net: NetworkConfig, lam: float = 1.0) -> Array:
+    """Eq. 8 re-expressed: T^F = lambda_f * FLOPs(theta_k, z) / (f * IPC).
+
+    NOTE (faithfulness ledger): the paper's literal Eq. 8 multiplies
+    activation bits by parameter bits under a cycles/bit coefficient, which
+    is dimensionally ambiguous (units: s * bits). We keep the paper's
+    structure - compute time scales with stage complexity over CPU clock -
+    but measure complexity in FLOPs from the layer profile. lambda stays a
+    per-model complexity multiplier as in Table I.
+    """
+    return lam * fwd_flops / (net.f_cpu_hz * IPC)
+
+
+def compute_time_bwd(bwd_flops: Array, net: NetworkConfig, lam: float = 1.0) -> Array:
+    """Eq. 9, same structure with lambda_b."""
+    return lam * bwd_flops / (net.f_cpu_hz * IPC)
+
+
+def compute_energy(flops: Array, net: NetworkConfig) -> Array:
+    """First term of Eq. 11: vartheta * f^2 * cycles (cycles = FLOPs/IPC)."""
+    return net.theta_chip * net.f_cpu_hz**2 * (flops / IPC)
+
+
+def sample_positions(key, net: NetworkConfig):
+    """Device + eavesdropper positions uniform in the area."""
+    k1, k2 = jax.random.split(key)
+    dev = jax.random.uniform(k1, (net.num_devices, 2)) * net.area_m
+    eav = jax.random.uniform(k2, (net.num_eaves, 2)) * net.area_m
+    return dev, eav
+
+
+def pairwise_dist(a: Array, b: Array) -> Array:
+    """a: (N,2), b: (M,2) -> (N,M)."""
+    return jnp.sqrt(jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1) + 1e-9)

@@ -1,0 +1,347 @@
+"""MHSL RL environment (paper §III): jittable, lax.scan-able.
+
+Episode structure (2S-1 steps, Eq. 15-23):
+  step 1           : pick s_1 and its sub-model size (no transmission)
+  steps 2..S       : pick next trainer (server at n=S), sub-model size,
+                     decoy set, powers; forward hop s_{n-1} -> s_n happens
+  steps S+1..2S-1  : gradient hops back (server -> ... -> s_1); agent picks
+                     decoys + powers only
+
+Action (factored discrete, masked):
+  u       in [0, U)        next trainer device
+  size    in [0, NBINS)    sub-model size bin (maps to #layers)
+  decoys  in {0,1}^U       deceptive-signal devices for this hop
+  p_tx    in [0, P)        trainer power level
+  p_d     in [0, P)        decoy power level (shared across decoys)
+
+State obs (Eq. 15): remaining energy/time, unassigned model fraction,
+per-device assignment vector r, transmitter one-hot v, distances to
+eavesdroppers l_M (zeroed when locations unknown) and devices l_D, phase.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import (
+    NetworkConfig,
+    compute_energy,
+    compute_time_bwd,
+    compute_time_fwd,
+    data_rate,
+    sample_positions,
+    tx_time,
+)
+from repro.core.leakage import sample_leakage
+from repro.core.profiles import LayerProfile
+
+Array = jax.Array
+
+NBINS = 4  # split-size bins
+OMEGA_1 = 5.0  # energy-violation penalty weight (Eq. 20)
+OMEGA_2 = 5.0  # time-violation penalty weight
+
+
+class EnvState(NamedTuple):
+    dev_pos: Array  # (U+1, 2), last row = server
+    eav_pos: Array  # (E, 2)
+    e_r: Array  # remaining energy (J)
+    t_r: Array  # remaining time (s)
+    assigned: Array  # (U+1,) 0 = free, k = holds stage k (1-indexed)
+    stage_dev: Array  # (S,) device per stage, -1 = unset
+    boundaries: Array  # (S,) cumulative layer counts, 0 = unset
+    layers_used: Array  # scalar
+    n: Array  # step counter (1-indexed)
+    done: Array
+    leaked: Array  # cumulative information leaked (for metrics)
+
+
+@dataclass(frozen=True)
+class MHSLEnv:
+    profile: LayerProfile
+    net: NetworkConfig = NetworkConfig()
+    know_eave_locations: bool = True
+    leak_scale: float = 1.0
+
+    # ---- static structure --------------------------------------------------
+    @property
+    def U(self) -> int:
+        return self.net.num_devices
+
+    @property
+    def E(self) -> int:
+        return self.net.num_eaves
+
+    @property
+    def S(self) -> int:
+        return self.net.max_split
+
+    @property
+    def L(self) -> int:
+        return self.profile.num_layers
+
+    @property
+    def episode_len(self) -> int:
+        return 2 * self.S - 1
+
+    @property
+    def num_power_levels(self) -> int:
+        return len(self.net.power_levels)
+
+    @property
+    def action_dims(self) -> Dict[str, int]:
+        return {
+            "u": self.U,
+            "size": NBINS,
+            "decoys": self.U,  # U binary heads
+            "p_tx": self.num_power_levels,
+            "p_d": self.num_power_levels,
+        }
+
+    @property
+    def obs_dim(self) -> int:
+        # e_r, t_r, remaining_frac, r (U+1), v one-hot (U+1), l_M (E),
+        # l_D (U+1), phase, n/2S
+        return 3 + (self.U + 1) + (self.U + 1) + self.E + (self.U + 1) + 2
+
+    # ---- constants as jnp --------------------------------------------------
+    def _consts(self):
+        prof = self.profile
+        act_bits = jnp.asarray(prof.act_bytes * 8.0)
+        grad_bits = jnp.asarray(prof.grad_bytes * 8.0)
+        leak = jnp.asarray(prof.leak_value / prof.leak_value.max())
+        fwd_cum = jnp.asarray(np.concatenate([[0.0], np.cumsum(prof.fwd_flops)]))
+        bwd_cum = jnp.asarray(np.concatenate([[0.0], np.cumsum(prof.bwd_flops)]))
+        powers = jnp.asarray(self.net.power_levels)
+        return act_bits, grad_bits, leak, fwd_cum, bwd_cum, powers
+
+    # ---- reset ---------------------------------------------------------------
+    def reset(self, key) -> EnvState:
+        kp, _ = jax.random.split(key)
+        dev, eav = sample_positions(kp, self.net)
+        server = jnp.full((1, 2), self.net.area_m / 2.0)
+        dev_pos = jnp.concatenate([dev, server], axis=0)
+        return EnvState(
+            dev_pos=dev_pos,
+            eav_pos=eav,
+            e_r=jnp.asarray(self.net.gamma_e),
+            t_r=jnp.asarray(self.net.gamma_t),
+            assigned=jnp.zeros(self.U + 1, jnp.int32),
+            stage_dev=jnp.full((self.S,), -1, jnp.int32),
+            boundaries=jnp.zeros((self.S,), jnp.int32),
+            layers_used=jnp.zeros((), jnp.int32),
+            n=jnp.ones((), jnp.int32),
+            done=jnp.zeros((), bool),
+            leaked=jnp.zeros(()),
+        )
+
+    # ---- observation -----------------------------------------------------------
+    def observe(self, state: EnvState) -> Array:
+        v_idx = self._current_tx(state)
+        v_onehot = jax.nn.one_hot(v_idx, self.U + 1)
+        v_pos = state.dev_pos[v_idx]
+        l_m = jnp.linalg.norm(state.eav_pos - v_pos[None, :], axis=1) / self.net.area_m
+        if not self.know_eave_locations:
+            l_m = jnp.zeros_like(l_m)
+        l_d = jnp.linalg.norm(state.dev_pos - v_pos[None, :], axis=1) / self.net.area_m
+        phase = (state.n > self.S).astype(jnp.float32)
+        return jnp.concatenate(
+            [
+                jnp.stack(
+                    [
+                        state.e_r / self.net.gamma_e,
+                        state.t_r / self.net.gamma_t,
+                        1.0 - state.layers_used / self.L,
+                    ]
+                ),
+                state.assigned.astype(jnp.float32) / self.S,
+                v_onehot,
+                l_m,
+                l_d,
+                jnp.stack([phase, state.n.astype(jnp.float32) / self.episode_len]),
+            ]
+        )
+
+    def _current_tx(self, state: EnvState) -> Array:
+        """Device transmitting at this step (for obs/leak geometry)."""
+        n = state.n
+        fwd_tx = state.stage_dev[jnp.clip(n - 2, 0, self.S - 1)]
+        # backward step n transmits from stage s_{2S-n+1} (1-indexed, Eq. 20)
+        bwd_tx = state.stage_dev[jnp.clip(2 * self.S - n, 0, self.S - 1)]
+        idx = jnp.where(n <= self.S, fwd_tx, bwd_tx)
+        return jnp.where(idx < 0, 0, idx).astype(jnp.int32)
+
+    # ---- action masks ------------------------------------------------------
+    def action_masks(self, state: EnvState) -> Dict[str, Array]:
+        n = state.n
+        assign_phase = n < self.S  # steps 1..S-1 pick devices
+        u_mask = jnp.where(
+            assign_phase, (state.assigned[: self.U] == 0), jnp.zeros(self.U, bool)
+        )
+        # always keep at least one valid entry for the categorical
+        u_mask = jnp.where(u_mask.any(), u_mask, jnp.ones(self.U, bool).at[1:].set(False))
+        size_mask = jnp.where(
+            assign_phase, jnp.ones(NBINS, bool), jnp.zeros(NBINS, bool).at[0].set(True)
+        )
+        # decoys: any device not transmitting/receiving this hop
+        tx = self._current_tx(state)
+        rx = self._rx(state)
+        dec_mask = jnp.ones(self.U, bool)
+        dec_mask = dec_mask.at[jnp.clip(tx, 0, self.U - 1)].set(
+            jnp.where(tx < self.U, False, dec_mask[jnp.clip(tx, 0, self.U - 1)])
+        )
+        dec_mask = dec_mask.at[jnp.clip(rx, 0, self.U - 1)].set(
+            jnp.where(rx < self.U, False, dec_mask[jnp.clip(rx, 0, self.U - 1)])
+        )
+        dec_mask = jnp.where(n >= 2, dec_mask, jnp.zeros(self.U, bool))
+        p_mask = jnp.ones(self.num_power_levels, bool)
+        return {"u": u_mask, "size": size_mask, "decoys": dec_mask,
+                "p_tx": p_mask, "p_d": p_mask}
+
+    def _rx(self, state: EnvState) -> Array:
+        n = state.n
+        fwd_rx = state.stage_dev[jnp.clip(n - 1, 0, self.S - 1)]
+        # backward step n delivers to stage s_{2S-n} (1-indexed, Eq. 20)
+        bwd_rx = state.stage_dev[jnp.clip(2 * self.S - n - 1, 0, self.S - 1)]
+        idx = jnp.where(n <= self.S, fwd_rx, bwd_rx)
+        return jnp.where(idx < 0, self.U, idx).astype(jnp.int32)
+
+    # ---- step ----------------------------------------------------------------
+    def step(self, state: EnvState, action: Dict[str, Array], key) -> Tuple[EnvState, Array, Array, Dict]:
+        act_bits, grad_bits, leak_v, fwd_cum, bwd_cum, powers = self._consts()
+        n = state.n
+        S, U, L = self.S, self.U, self.L
+
+        # ---- 1) assignment phase bookkeeping (steps 1..S) --------------------
+        is_assign = n < S  # agent picks a device for stages 1..S-1
+        is_server_stage = n == S  # stage S goes to the server automatically
+        stage_idx = jnp.clip(n - 1, 0, S - 1)
+
+        # size mapping: keep >=1 layer for each later stage
+        remaining = L - state.layers_used
+        stages_after = S - n
+        max_take = jnp.maximum(remaining - stages_after, 1)
+        frac = (action["size"].astype(jnp.float32) + 1.0) / NBINS
+        take = jnp.clip(jnp.ceil(frac * max_take).astype(jnp.int32), 1, max_take)
+        take = jnp.where(is_server_stage, remaining, take)
+
+        new_dev = jnp.where(
+            is_assign, action["u"].astype(jnp.int32), jnp.where(is_server_stage, U, -1)
+        )
+        do_assign = is_assign | is_server_stage
+        stage_dev = jnp.where(
+            do_assign, state.stage_dev.at[stage_idx].set(new_dev), state.stage_dev
+        )
+        boundaries = jnp.where(
+            do_assign,
+            state.boundaries.at[stage_idx].set(state.layers_used + take),
+            state.boundaries,
+        )
+        layers_used = jnp.where(do_assign, state.layers_used + take, state.layers_used)
+        assigned = jnp.where(
+            is_assign & (new_dev < U),
+            state.assigned.at[jnp.clip(new_dev, 0, U)].set(n.astype(jnp.int32)),
+            state.assigned,
+        )
+
+        # ---- 2) transmission (steps 2..2S-1) --------------------------------
+        has_hop = n >= 2
+        fwd_hop = has_hop & (n <= S)
+        hop_fwd_idx = jnp.clip(n - 2, 0, S - 2)  # forward hop index (0-based)
+        hop_bwd_idx = jnp.clip(2 * S - n - 1, 0, S - 2)  # backward hop index
+        hop = jnp.where(fwd_hop, hop_fwd_idx, hop_bwd_idx)
+
+        tx = jnp.where(fwd_hop, stage_dev[hop], stage_dev[hop + 1])
+        rx = jnp.where(fwd_hop, stage_dev[hop + 1], stage_dev[hop])
+        tx = jnp.where(tx < 0, 0, tx)
+        rx = jnp.where(rx < 0, U, rx)
+        boundary_layer = jnp.clip(boundaries[hop] - 1, 0, L - 1)
+        bits = jnp.where(fwd_hop, act_bits[boundary_layer], grad_bits[boundary_layer])
+
+        p_tx = powers[action["p_tx"]]
+        p_d_level = powers[action["p_d"]]
+        decoys = action["decoys"].astype(jnp.float32)
+        # exclude tx/rx from decoys regardless of agent output
+        decoys = decoys.at[jnp.clip(tx, 0, U - 1)].set(
+            jnp.where(tx < U, 0.0, decoys[jnp.clip(tx, 0, U - 1)])
+        )
+        decoys = decoys.at[jnp.clip(rx, 0, U - 1)].set(
+            jnp.where(rx < U, 0.0, decoys[jnp.clip(rx, 0, U - 1)])
+        )
+        decoy_p = jnp.concatenate([decoys * p_d_level, jnp.zeros((1,))])  # (U+1,)
+
+        tx_pos = state.dev_pos[tx]
+        rx_pos = state.dev_pos[rx]
+        d_tx_rx = jnp.linalg.norm(tx_pos - rx_pos) + 1e-6
+        d_dec_rx = jnp.linalg.norm(state.dev_pos - rx_pos[None, :], axis=1)
+        rate = data_rate(p_tx, d_tx_rx, decoy_p, d_dec_rx, self.net)
+        t_hop = jnp.where(has_hop, tx_time(bits, rate), 0.0)
+
+        # stage compute times (receiving stage fwd / transmitting stage bwd)
+        st = jnp.where(fwd_hop, hop + 1, hop + 1)
+        lo = jnp.where(st == 0, 0, boundaries[jnp.clip(st - 1, 0, S - 1)])
+        hi = boundaries[st]
+        t_comp = jnp.where(
+            fwd_hop,
+            compute_time_fwd(fwd_cum[hi] - fwd_cum[lo], self.net),
+            compute_time_bwd(bwd_cum[hi] - bwd_cum[lo], self.net),
+        )
+        t_comp = jnp.where(has_hop, t_comp, 0.0)
+        e_comp = jnp.where(
+            has_hop, compute_energy(fwd_cum[hi] - fwd_cum[lo], self.net), 0.0
+        )
+        e_hop = (p_tx + decoy_p.sum()) * t_hop + e_comp
+
+        # ---- 3) leakage (Eqs. 12-13, 20-21) ----------------------------------
+        d_tx_e = jnp.linalg.norm(state.eav_pos - tx_pos[None, :], axis=1)
+        decoy_dist_e = jnp.linalg.norm(
+            state.dev_pos[:, None, :] - state.eav_pos[None, :, :], axis=-1
+        )  # (U+1, E)
+        q_e = jnp.full((self.E,), self.net.monitor_prob)
+        delta = leak_v[boundary_layer] * self.leak_scale
+        leak = jnp.where(
+            has_hop,
+            sample_leakage(
+                key, p_tx, d_tx_e, decoy_p, decoy_dist_e, q_e, delta, self.net.rayleigh_o
+            ),
+            0.0,
+        )
+
+        # ---- 4) budgets + reward (Eq. 20) -------------------------------------
+        e_r = state.e_r - e_hop
+        t_r = state.t_r - t_hop - t_comp
+        reward = (
+            -leak
+            - OMEGA_1 * (e_r <= 0).astype(jnp.float32)
+            - OMEGA_2 * (t_r <= 0).astype(jnp.float32)
+        )
+        reward = jnp.where(has_hop, reward, 0.0)
+
+        done = n >= self.episode_len
+        new_state = EnvState(
+            dev_pos=state.dev_pos,
+            eav_pos=state.eav_pos,
+            e_r=e_r,
+            t_r=t_r,
+            assigned=assigned,
+            stage_dev=stage_dev,
+            boundaries=boundaries,
+            layers_used=layers_used,
+            n=n + 1,
+            done=done,
+            leaked=state.leaked + leak,
+        )
+        info = {
+            "leak": leak,
+            "t_hop": t_hop,
+            "e_hop": e_hop,
+            "rate": rate,
+            "tx": tx,
+            "rx": rx,
+            "decoy_p": decoy_p,
+        }
+        return new_state, reward, done, info

@@ -1,0 +1,129 @@
+"""Eavesdropper & leakage model: Eq. 12-13, Theorem 1, Corollaries 1-2.
+
+All expressions follow the paper exactly:
+  * an eavesdropper locks onto the max-SNR signal among {trainer} U decoys
+    (Eq. 12) under Rayleigh fading, giving capture probability
+      P(e captures trainer) = prod_d  p_s m_s,e^-2 / (p_d m_d,e^-2 + p_s m_s,e^-2)
+    (Theorem 1 / Eq. 37);
+  * expected leakage of one hop = sum_e P_capture(e) * q_e * delta (Eq. 30);
+  * closed-form optimal powers for |D|=1 (Corollary 1) and |E|=1
+    (Corollary 2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import NetworkConfig, channel_gain
+
+Array = jax.Array
+
+
+def capture_probability(
+    p_tx: Array,  # scalar trainer power
+    dist_tx_e: Array,  # (E,) trainer -> eavesdropper distances
+    decoy_p: Array,  # (U,) decoy powers (0 for non-decoys)
+    decoy_dist_e: Array,  # (U, E) decoy -> eavesdropper distances
+    o: float = 1.0,
+) -> Array:
+    """Theorem 1 product term, per eavesdropper. Returns (E,)."""
+    s_tx = p_tx * channel_gain(dist_tx_e, o)  # (E,)
+    s_d = decoy_p[:, None] * channel_gain(decoy_dist_e, o)  # (U, E)
+    # P(S_d < S_tx) per decoy; inactive decoys (p=0) contribute factor 1
+    frac = s_tx[None, :] / jnp.maximum(s_d + s_tx[None, :], 1e-30)  # (U, E)
+    frac = jnp.where(decoy_p[:, None] > 0, frac, 1.0)
+    return jnp.prod(frac, axis=0)  # (E,)
+
+
+def expected_leakage(
+    p_tx: Array,
+    dist_tx_e: Array,
+    decoy_p: Array,
+    decoy_dist_e: Array,
+    q_e: Array,  # (E,) monitoring probabilities
+    delta: Array,  # scalar information value of this hop
+    o: float = 1.0,
+) -> Array:
+    """Eq. 30: E[I] for one hop."""
+    cap = capture_probability(p_tx, dist_tx_e, decoy_p, decoy_dist_e, o)
+    return jnp.sum(cap * q_e) * delta
+
+
+def sample_leakage(
+    key,
+    p_tx: Array,
+    dist_tx_e: Array,
+    decoy_p: Array,
+    decoy_dist_e: Array,
+    q_e: Array,
+    delta: Array,
+    o: float = 1.0,
+) -> Array:
+    """Monte-Carlo single-draw leakage (Eqs. 12-13, 20-21): sample Rayleigh
+    SNRs, pick the argmax per eavesdropper, sample the monitoring Bernoulli."""
+    ke, kq = jax.random.split(key)
+    e = dist_tx_e.shape[0]
+    u = decoy_p.shape[0]
+    # Rayleigh power ~ Exponential(mean = p h): sample via -mean*log(U)
+    un = jax.random.uniform(ke, (u + 1, e), minval=1e-12, maxval=1.0)
+    mean_tx = p_tx * channel_gain(dist_tx_e, o)  # (E,)
+    mean_d = decoy_p[:, None] * channel_gain(decoy_dist_e, o)  # (U, E)
+    means = jnp.concatenate([mean_tx[None, :], mean_d], axis=0)  # (U+1, E)
+    snr = -means * jnp.log(un)
+    captured = jnp.argmax(snr, axis=0) == 0  # (E,) trainer had max SNR
+    monitored = jax.random.uniform(kq, (e,)) < q_e
+    return jnp.sum(captured & monitored) * delta
+
+
+# ---------------------------------------------------------------------------
+# Corollaries: closed-form optimal powers
+# ---------------------------------------------------------------------------
+
+
+def optimal_powers_single_decoy(
+    bits: Array,  # Gamma(z_k) in bits
+    dist_tx_rx: Array,  # m_{s_k, s_{k+1}}
+    dist_tx_decoy: Array,  # m_{s_k, d}: decoy interference distance AT THE RECEIVER
+    b_t: Array,  # time budget B_T
+    b_e: Array,  # energy budget B_E
+    net: NetworkConfig,
+) -> Tuple[Array, Array]:
+    """Corollary 1 (|D|=1): returns (p_s*, p_d*).
+
+    xi_0 p_s - xi_d p_d = chi_1 (rate constraint tight)
+    p_s + p_d = chi_2 = B_E / B_T (energy tight)
+    """
+    o = net.rayleigh_o
+    snr_req = 2.0 ** (bits / (b_t * net.bandwidth_hz)) - 1.0
+    xi0 = o / dist_tx_rx**2
+    xid = (o / dist_tx_decoy**2) * snr_req
+    chi1 = net.noise_w * snr_req
+    chi2 = b_e / b_t
+    p_s = (chi1 + xid * chi2) / (xi0 + xid)
+    p_d = (xi0 * chi2 - chi1) / (xi0 + xid)
+    return p_s, p_d
+
+
+def optimal_powers_single_eave(
+    bits: Array,
+    dist_tx_rx: Array,
+    decoy_dist_e: Array,  # (D,) decoy -> eavesdropper distances
+    b_t: Array,
+    b_e: Array,
+    net: NetworkConfig,
+) -> Tuple[Array, Array]:
+    """Corollary 2 (|E|=1, decoy interference at the receiver ignored):
+    returns (p_s*, p_d* (D,))."""
+    o = net.rayleigh_o
+    snr_req = 2.0 ** (bits / (b_t * net.bandwidth_hz)) - 1.0
+    xi0 = o / dist_tx_rx**2
+    chi1 = net.noise_w * snr_req
+    chi2 = b_e / b_t
+    p_s = chi1 / xi0
+    # water-levelling: equalize p_d m_{d,e}^-2 across decoys (Eq. 47-50)
+    budget = chi2 - p_s
+    denom = jnp.sum(decoy_dist_e**2)
+    p_d = budget * decoy_dist_e**2 / jnp.maximum(denom, 1e-30)
+    return p_s, p_d

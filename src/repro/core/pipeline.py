@@ -1,0 +1,156 @@
+"""TPU-native MHSL executor: a split plan runs as pipeline parallelism.
+
+The paper's multi-hop split learning IS pipeline parallelism: sub-model k
+on device s_k, activations hop s_k -> s_{k+1} (Eq. 1), gradients hop back
+(Eq. 4). Here a ``SplitPlan`` executes on a TPU mesh 'stage' axis via
+``shard_map`` with ``jax.lax.ppermute`` hops - ICI links play the role of
+the wireless links, and JAX's ppermute transpose gives the backward hops
+automatically under ``jax.grad``.
+
+Uneven splits (the RL agent's choice!) are supported by padding every
+stage to the longest stage with zero-initialized blocks: residual blocks
+with zeroed projections are exact identities, so the pipeline computes the
+same function while exposing the real cost of imbalance (bubble time) -
+exactly the trade-off the paper's Eq. 10 penalizes.
+
+Restriction: architectures with layer-group period 1 (all but Jamba, whose
+period is 8; noted in DESIGN.md SArch-applicability).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import layers as L
+
+
+def stage_lengths(boundaries: Sequence[int]) -> Tuple[int, ...]:
+    out, lo = [], 0
+    for b in boundaries:
+        out.append(b - lo)
+        lo = b
+    return tuple(out)
+
+
+def restack_for_stages(slot_params, boundaries: Sequence[int]):
+    """(L, ...) stacked layer params -> (S, max_len, ...) with zero padding.
+
+    Zero-padded blocks are exact identity functions of the residual stream
+    (all projections zero => zero update).
+    """
+    s = len(boundaries)
+    lens = stage_lengths(boundaries)
+    max_len = max(lens)
+
+    def one(a):
+        parts = []
+        lo = 0
+        for k, b in enumerate(boundaries):
+            seg = a[lo:b]
+            pad = max_len - (b - lo)
+            if pad:
+                seg = jnp.concatenate(
+                    [seg, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0
+                )
+            parts.append(seg)
+            lo = b
+        return jnp.stack(parts)  # (S, max_len, ...)
+
+    return jax.tree.map(one, slot_params)
+
+
+def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
+                     n_microbatches: int, stage_axis: str = "stage"):
+    """Build a pipelined LM loss: (params, tokens, labels) -> scalar loss.
+
+    tokens: (M * mb, T). The GPipe-style schedule runs M + S - 1 ticks;
+    each tick every stage applies its blocks and ppermutes the activation
+    to the next stage.
+    """
+    sig = M.signature(cfg)
+    period = M.find_period(sig)
+    assert period == 1, f"pipeline executor needs period-1 archs, got {period}"
+    slot_sig = sig[0]
+    s_stages = len(boundaries)
+    max_len = max(stage_lengths(boundaries))
+
+    def fn(params, tokens, labels):
+        stage_blocks = restack_for_stages(params["slots"][0], boundaries)
+        m_total, t_len = tokens.shape
+        mb = m_total // n_microbatches
+        tok_mb = tokens.reshape(n_microbatches, mb, t_len)
+        lab_mb = labels.reshape(n_microbatches, mb, t_len)
+
+        def per_stage(stage_blocks, tok_mb, lab_mb, embed, final_norm, head):
+            stage_blocks = jax.tree.map(lambda a: a[0], stage_blocks)  # drop S dim
+            sidx = jax.lax.axis_index(stage_axis)
+            positions = jnp.arange(t_len)
+
+            def apply_stage(x):
+                for i in range(max_len):
+                    blk = jax.tree.map(lambda a: a[i], stage_blocks)
+                    x, _, _ = M.block_apply(
+                        blk, x, cfg, slot_sig, positions=positions, cache=None,
+                        cache_index=None, impl="auto",
+                    )
+                return x
+
+            def tick(carry, t):
+                x, loss_acc, nloss = carry
+                # stage 0 ingests microbatch t (if valid)
+                mb_in_idx = jnp.clip(t, 0, n_microbatches - 1)
+                fresh = embed[tok_mb[mb_in_idx]].astype(x.dtype)
+                x = jnp.where((sidx == 0) & (t < n_microbatches), fresh, x)
+                x = apply_stage(x)
+                # last stage emits loss for microbatch t - (S-1)
+                mb_out = t - (s_stages - 1)
+                is_out = (sidx == s_stages - 1) & (mb_out >= 0)
+                xh = L.rms_norm(x, final_norm, cfg.norm_eps)
+                logits = jnp.einsum("bsd,dv->bsv", xh, head.astype(x.dtype))
+                lab = lab_mb[jnp.clip(mb_out, 0, n_microbatches - 1)]
+                li = M.softmax_xent(logits, lab)
+                loss_acc = loss_acc + jnp.where(is_out, li, 0.0)
+                nloss = nloss + jnp.where(is_out, 1.0, 0.0)
+                # hop to the next stage (the multi-hop transmission, Eq. 1)
+                perm = [(i, (i + 1) % s_stages) for i in range(s_stages)]
+                x = jax.lax.ppermute(x, stage_axis, perm)
+                return (x, loss_acc, nloss), None
+
+            x0 = jnp.zeros((mb, t_len, cfg.d_model), jnp.bfloat16)
+            ticks = n_microbatches + s_stages - 1
+            (x, loss_acc, nloss), _ = jax.lax.scan(
+                tick, (x0, jnp.zeros(()), jnp.zeros(())), jnp.arange(ticks)
+            )
+            # broadcast the last stage's mean loss to everyone
+            total = jax.lax.psum(loss_acc, stage_axis)
+            cnt = jax.lax.psum(nloss, stage_axis)
+            return total / jnp.maximum(cnt, 1.0)
+
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        loss = shard_map(
+            per_stage,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: P(stage_axis), stage_blocks),
+                P(), P(), P(), P(), P(),
+            ),
+            out_specs=P(),
+            check_rep=False,
+        )(stage_blocks, tok_mb, lab_mb, params["embed"], params["final_norm"], head)
+        return loss
+
+    return fn
+
+
+def make_stage_mesh(n_stages: int, stage_axis: str = "stage") -> Mesh:
+    devs = jax.devices()[:n_stages]
+    assert len(devs) >= n_stages, f"need {n_stages} devices, have {len(jax.devices())}"
+    return Mesh(np.array(devs), (stage_axis,))

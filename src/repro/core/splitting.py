@@ -1,0 +1,121 @@
+"""Split plans: partition a LayerProfile into S sequential stages.
+
+A plan is ``boundaries`` = cumulative layer counts [c_1 < ... < c_S = L]:
+stage k holds layers [c_{k-1}, c_k). ``devices`` maps stage -> device id
+(device U == the server, which always holds the last stage).
+
+Provides the Eq. 6-11 aggregate delay/energy of executing a plan, and an
+exhaustive plan enumerator used by the oracle baselines and tests.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Iterator, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import (
+    NetworkConfig,
+    compute_energy,
+    compute_time_bwd,
+    compute_time_fwd,
+    data_rate,
+    tx_time,
+)
+from repro.core.profiles import LayerProfile
+
+
+@dataclass(frozen=True)
+class SplitPlan:
+    boundaries: Tuple[int, ...]  # cumulative, last == L
+    devices: Tuple[int, ...]  # stage -> device id (len S; last is server id)
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.boundaries)
+
+    def stage_range(self, k: int) -> Tuple[int, int]:
+        lo = 0 if k == 0 else self.boundaries[k - 1]
+        return lo, self.boundaries[k]
+
+
+def stage_sums(profile: LayerProfile, boundaries: Sequence[int], field: str) -> np.ndarray:
+    arr = getattr(profile, field)
+    out = []
+    lo = 0
+    for hi in boundaries:
+        out.append(arr[lo:hi].sum())
+        lo = hi
+    return np.asarray(out)
+
+
+def boundary_bits(profile: LayerProfile, boundaries: Sequence[int], field: str) -> np.ndarray:
+    """Bits transmitted at each inter-stage hop (S-1 hops).
+
+    Hop k carries the activation emitted by the last layer of stage k.
+    """
+    arr = getattr(profile, field)
+    return np.asarray([arr[b - 1] * 8.0 for b in boundaries[:-1]])
+
+
+def plan_cost(
+    profile: LayerProfile,
+    plan: SplitPlan,
+    positions: np.ndarray,  # (U+1, 2) device positions (last row = server)
+    p_tx: np.ndarray,  # (S-1,) trainer power per forward hop
+    decoy_power: np.ndarray,  # (S-1, U+1) decoy powers per hop (0 = inactive)
+    net: NetworkConfig,
+):
+    """Total delay (Eq. 10) and energy (Eq. 11) of one training iteration.
+
+    Gradient hops reuse the same powers in reverse (the env lets the agent
+    choose per-hop powers; this helper is the static-cost oracle).
+    """
+    s = plan.num_stages
+    fwd = stage_sums(profile, plan.boundaries, "fwd_flops")
+    bwd = stage_sums(profile, plan.boundaries, "bwd_flops")
+    act_bits = boundary_bits(profile, plan.boundaries, "act_bytes")
+    grad_bits = boundary_bits(profile, plan.boundaries, "grad_bytes")
+
+    t_total = 0.0
+    e_total = 0.0
+    for k in range(s):
+        t_total += float(compute_time_fwd(fwd[k], net))
+        t_total += float(compute_time_bwd(bwd[k], net))
+        e_total += float(compute_energy(fwd[k] + bwd[k], net))
+    for k in range(s - 1):
+        tx, rx = plan.devices[k], plan.devices[k + 1]
+        d_tx_rx = float(np.linalg.norm(positions[tx] - positions[rx]))
+        d_dec_rx = np.linalg.norm(positions - positions[rx], axis=1)
+        # forward hop
+        r = float(
+            data_rate(p_tx[k], d_tx_rx, jnp.asarray(decoy_power[k]), jnp.asarray(d_dec_rx), net)
+        )
+        t_f = float(tx_time(act_bits[k], r))
+        # gradient hop (reverse direction, same powers)
+        d_dec_tx = np.linalg.norm(positions - positions[tx], axis=1)
+        r_b = float(
+            data_rate(p_tx[k], d_tx_rx, jnp.asarray(decoy_power[k]), jnp.asarray(d_dec_tx), net)
+        )
+        t_b = float(tx_time(grad_bits[k], r_b))
+        t_total += t_f + t_b
+        e_total += (float(p_tx[k]) + float(decoy_power[k].sum())) * (t_f + t_b)
+    return t_total, e_total
+
+
+def enumerate_boundaries(num_layers: int, s: int) -> Iterator[Tuple[int, ...]]:
+    """All ways to cut L layers into S non-empty contiguous stages."""
+    for cuts in itertools.combinations(range(1, num_layers), s - 1):
+        yield tuple(cuts) + (num_layers,)
+
+
+def even_boundaries(num_layers: int, s: int) -> Tuple[int, ...]:
+    base = num_layers // s
+    rem = num_layers % s
+    out, acc = [], 0
+    for k in range(s):
+        acc += base + (1 if k < rem else 0)
+        out.append(acc)
+    return tuple(out)

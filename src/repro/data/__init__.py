@@ -1,0 +1,3 @@
+from repro.data.pipeline import input_specs, synthetic_batch, synthetic_stream
+
+__all__ = ["input_specs", "synthetic_batch", "synthetic_stream"]

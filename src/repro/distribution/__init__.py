@@ -1,0 +1,15 @@
+from repro.distribution.sharding import (
+    batch_sharding,
+    cache_shardings,
+    named,
+    param_shardings,
+    spec_for_param,
+)
+
+__all__ = [
+    "batch_sharding",
+    "cache_shardings",
+    "named",
+    "param_shardings",
+    "spec_for_param",
+]

@@ -1,0 +1,85 @@
+"""Activation-sharding context: explicit with_sharding_constraint hints.
+
+GSPMD propagation loses the batch sharding through nested scans (flash-style
+attention, SSD chunk scans), silently replicating activations 16x. Model
+code calls ``constrain(x, {dim: role})`` at key points; outside a context
+(CPU tests) it is a no-op.
+
+Roles: 'batch' -> the ('pod','data') axes, 'model' -> tensor-parallel axis,
+'expert' -> alias of 'model' (experts live on the TP axis).
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "batch": None, "model": "model", "kv_seq": False,
+          "moe_a2a": False}
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, batch_axes, model_axis: str = "model",
+                        kv_seq_shard: bool = False, moe_a2a: bool = False):
+    old = dict(_STATE)
+    _STATE.update(mesh=mesh, batch=batch_axes, model=model_axis,
+                  kv_seq=kv_seq_shard, moe_a2a=moe_a2a)
+    try:
+        yield
+    finally:
+        _STATE.clear()
+        _STATE.update(old)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return sizes.get(axes, 1)
+    return math.prod(sizes.get(a, 1) for a in axes)
+
+
+def constrain(x, roles: Dict[int, str]):
+    """Apply a sharding constraint; no-op outside an activation context."""
+    mesh = _STATE["mesh"]
+    if mesh is None or not hasattr(x, "ndim"):
+        return x
+    spec = [None] * x.ndim
+    for d, role in roles.items():
+        if d >= x.ndim:
+            continue
+        ax = _STATE["batch"] if role == "batch" else _STATE["model"]
+        if ax is None:
+            continue
+        if role != "batch" and (
+            not isinstance(ax, str) or ax not in mesh.axis_names
+        ):
+            continue
+        if x.shape[d] % _axes_size(mesh, ax) == 0 and x.shape[d] > 0:
+            spec[d] = ax
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def active() -> bool:
+    return _STATE["mesh"] is not None
+
+
+def kv_seq_shard_enabled() -> bool:
+    return bool(_STATE.get("kv_seq"))
+
+
+def moe_a2a_enabled() -> bool:
+    return bool(_STATE.get("moe_a2a"))
+
+
+def model_axis_divides(n: int) -> bool:
+    """True when the tensor-parallel axis evenly divides `n` (False when no
+    activation-sharding context is installed)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return False
+    return n % _axes_size(mesh, _STATE["model"]) == 0

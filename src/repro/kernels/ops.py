@@ -1,0 +1,9 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container ``interpret=True`` executes the kernel bodies in
+Python for correctness validation; on TPU pass ``interpret=False``.
+"""
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["flash_attention", "ssd_scan"]

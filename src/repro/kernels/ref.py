@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KH, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s *= 1.0 / math.sqrt(hd)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    ok = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b, c, *, chunk: int = 64, h0=None):
+    """Delegates to the model's chunked SSD implementation."""
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, a, b, c, chunk=chunk, h0=h0)

@@ -1,0 +1,360 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, record memory/cost/collective analysis for the roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the
+device count on first init. Only the dry-run uses 512 placeholder devices.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import input_specs
+from repro.distribution.context import activation_sharding
+from repro.distribution.sharding import (
+    batch_axes,
+    cache_shardings,
+    param_shardings,
+)
+from repro.launch.hlo_analysis import parse_collectives, roofline_from
+from repro.launch.mesh import make_production_mesh
+from repro.models import (
+    init_caches,
+    init_params,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.optim import adamw
+
+# sliding window used when a full-attention arch must run long_500k
+LONG_CONTEXT_WINDOW = 8192
+
+# SPerf-measured: seq-sharding fresh KV (cache-layout alignment) wins for
+# these archs (kh=8, hd=128) and regresses for kh=4 / hd=192 archs.
+KV_SEQ_SHARD_GOOD = {"pixtral-12b", "minitron-4b"}
+
+
+def arch_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k needs sub-quadratic attention: switch full-attention archs
+    to their sliding-window variant (noted in EXPERIMENTS.md)."""
+    if (
+        shape.name == "long_500k"
+        and "A" in cfg.pattern
+        and cfg.attention_window is None
+    ):
+        return cfg.with_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _tokens_per_device(shape: ShapeConfig, n_dev: int) -> float:
+    toks = shape.global_batch * (shape.seq_len if shape.kind == "train" else (
+        shape.seq_len if shape.kind == "prefill" else 1))
+    return toks / n_dev
+
+
+def model_flops_per_device(cfg: ModelConfig, shape: ShapeConfig, n_dev: int) -> float:
+    n_active = cfg.active_param_count()
+    toks = _tokens_per_device(shape, n_dev)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * toks
+
+
+def analytic_hlo_flops_per_device(
+    cfg: ModelConfig, shape: ShapeConfig, n_dev: int, *, remat: bool = True
+) -> float:
+    """Closed-form estimate of the compiled per-device matmul FLOPs.
+
+    XLA's cost analysis counts a lax.scan body once, so the scan-mode
+    compile under-reports; this analytic model (validated within ~2% of
+    fully-unrolled compiles, see EXPERIMENTS.md SDry-run) is used for the
+    roofline compute term.  Terms: parameter matmuls (2*active per token),
+    attention score/value matmuls (causal-halved), LM head, backward (2x)
+    and remat recompute (1x) for training.
+    """
+    toks = _tokens_per_device(shape, n_dev)
+    # parameter matmuls, input embedding excluded (gather, not matmul)
+    active = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    fwd = 2.0 * active * toks
+    # attention quadratic
+    ctx = min(shape.seq_len, cfg.attention_window or shape.seq_len)
+    n_attn = cfg.num_attn_layers
+    if n_attn and cfg.num_heads:
+        per_tok = 4.0 * ctx * cfg.num_heads * cfg.head_dim
+        if shape.kind != "decode":
+            per_tok *= 0.5  # causal half
+        fwd += per_tok * n_attn * toks
+    if shape.kind == "train":
+        mult = 3.0 + (1.0 if remat else 0.0)
+        return fwd * mult
+    return fwd
+
+
+def build_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, *, remat=True, unroll=True,
+                  variant: str = "baseline"):
+    """Lower the right step function for this shape kind. Returns jax.Lowered.
+
+    variants (SPerf hillclimb):
+      baseline           - f32 params, FSDP+TP train sharding everywhere
+      bf16cast           - train: per-step bf16 compute copy of matrix params
+      serve_resident     - decode/prefill: weights resident (no FSDP axis)
+      serve_resident_bf16- serve_resident + weights stored in bf16
+    """
+    n_dev = mesh.devices.size
+    baxes = batch_axes(mesh, shape.global_batch)
+    param_dtype = (
+        jnp.bfloat16 if variant == "serve_resident_bf16" and shape.kind != "train"
+        else jnp.float32
+    )
+    params_shape = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, dtype=param_dtype)
+    )
+    p_mode = "serve" if variant.startswith("serve_resident") and shape.kind != "train" else "train"
+    psh = param_shardings(params_shape, cfg, mesh, mode=p_mode)
+    compute_copy = jnp.bfloat16 if (variant == "bf16cast" and shape.kind == "train") else None
+    kv_seq = cfg.name.split("-sw")[0] in KV_SEQ_SHARD_GOOD or any(
+        cfg.name.startswith(a) for a in KV_SEQ_SHARD_GOOD
+    )
+    moe_a2a = variant == "moe_a2a"
+    specs = input_specs(cfg, shape)
+
+    def bsh(spec):
+        return NamedSharding(mesh, P(baxes, *([None] * (len(spec.shape) - 1))))
+
+    if shape.kind == "train":
+        opt = adamw(1e-4, max_grad_norm=1.0)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        osh = param_shardings(opt_shape, cfg, mesh)
+        step = make_train_step(cfg, opt, remat=remat, unroll=unroll,
+                               compute_copy_dtype=compute_copy,
+                               param_shardings_tree=psh if compute_copy else None)
+        batch_sh = {k: bsh(v) for k, v in specs.items()}
+        metrics_sh = {
+            "loss": NamedSharding(mesh, P()),
+            "aux": NamedSharding(mesh, P()),
+            "total": NamedSharding(mesh, P()),
+        }
+        jitted = jax.jit(
+            step,
+            in_shardings=(psh, osh, batch_sh),
+            out_shardings=(psh, osh, metrics_sh),
+        )
+        with activation_sharding(mesh, baxes, kv_seq_shard=kv_seq, moe_a2a=moe_a2a):
+            return jitted.lower(params_shape, opt_shape, specs)
+
+    if shape.kind == "prefill":
+        f = shape.seq_len - (cfg.frontend_tokens if cfg.frontend != "none" else 0)
+        cache_len = shape.seq_len
+        caches_shape = jax.eval_shape(
+            lambda: init_caches(cfg, shape.global_batch, cache_len)
+        )
+        csh = cache_shardings(caches_shape, cfg, mesh, shape.global_batch)
+        prefill = make_prefill_step(cfg, unroll=unroll)
+
+        def prefill_full(params, tokens, frontend=None):
+            caches = jax.tree.map(
+                lambda s, sh: jax.lax.with_sharding_constraint(jnp.zeros(s.shape, s.dtype), sh),
+                caches_shape, csh,
+            )
+            return prefill(params, tokens, caches, frontend_feats=frontend)
+
+        logits_sh = NamedSharding(
+            mesh, P(baxes, "model" if cfg.vocab_size % _axis(mesh, "model") == 0 else None)
+        )
+        args = [params_shape, specs["tokens"]]
+        in_sh = [psh, bsh(specs["tokens"])]
+        if "frontend" in specs:
+            args.append(specs["frontend"])
+            in_sh.append(bsh(specs["frontend"]))
+        jitted = jax.jit(
+            prefill_full,
+            in_shardings=tuple(in_sh),
+            out_shardings=(logits_sh, csh),
+        )
+        with activation_sharding(mesh, baxes, kv_seq_shard=kv_seq, moe_a2a=moe_a2a):
+            return jitted.lower(*args)
+
+    # decode
+    cache_len = shape.seq_len
+    caches_shape = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, cache_len)
+    )
+    csh = cache_shardings(caches_shape, cfg, mesh, shape.global_batch)
+    decode = make_decode_step(cfg, unroll=unroll)
+    logits_sh = NamedSharding(
+        mesh, P(baxes, "model" if cfg.vocab_size % _axis(mesh, "model") == 0 else None)
+    )
+    jitted = jax.jit(
+        decode,
+        in_shardings=(psh, bsh(specs["tokens"]), csh, NamedSharding(mesh, P())),
+        out_shardings=(logits_sh, csh),
+    )
+    with activation_sharding(mesh, baxes, kv_seq_shard=kv_seq, moe_a2a=moe_a2a):
+        return jitted.lower(
+            params_shape, specs["tokens"], caches_shape, specs["cache_index"]
+        )
+
+
+def _axis(mesh, name):
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _period(cfg: ModelConfig) -> int:
+    from repro.models import find_period, signature
+
+    return find_period(signature(cfg))
+
+
+def _scaled_bytes(cost_raw: dict, repeats: int) -> float:
+    """Approximate unrolled bytes-accessed from a scan-mode compile: the
+    dominant traffic is the layer loop body, counted once by XLA; scaling
+    by the trip count recovers the per-step total (validated vs unrolled
+    compiles, see EXPERIMENTS.md)."""
+    return float(cost_raw.get("bytes accessed", 0.0)) * repeats
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod=False, out_dir="experiments/dryrun",
+            verbose=True, variant: str = "baseline"):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = get_shape(shape_name)
+    cfg0 = get_config(arch)
+    cfg = arch_for_shape(cfg0, shape)
+    t0 = time.time()
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": cfg.name,
+        "perf_variant": variant,
+        "n_devices": int(mesh.devices.size),
+    }
+    try:
+        # single scan-mode compile (deployment form). Memory analysis is
+        # meaningful (the loop reuses buffers by construction); collectives
+        # inside the layer loop are scaled by the parsed trip count; the
+        # compute term uses the analytic matmul-FLOPs model (validated vs
+        # unrolled compiles within ~2%, see EXPERIMENTS.md).
+        lowered = build_lowered(cfg, shape, mesh, unroll=False, variant=variant)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost_raw = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        coll = parse_collectives(txt, loop_aware=True)
+        mf = model_flops_per_device(cfg, shape, mesh.devices.size)
+        af = analytic_hlo_flops_per_device(cfg, shape, mesh.devices.size)
+        # memory term: scale scan-mode bytes-accessed by the layer loop too
+        coll_flat = parse_collectives(txt, loop_aware=False)
+        cost = dict(cost_raw)
+        cost["flops"] = af
+        rep = max(1, cfg.num_layers // _period(cfg))
+        cost["bytes accessed"] = _scaled_bytes(cost_raw, rep)
+        roof = roofline_from(cost, coll, mf)
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            flops_xla_scan=float(cost_raw.get("flops", 0.0)),
+            bytes_xla_scan=float(cost_raw.get("bytes accessed", 0.0)),
+            collectives_scan_body=dict(
+                wire_bytes=coll_flat.wire_bytes, counts=coll_flat.counts
+            ),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+            ),
+            collectives=dict(
+                result_bytes=coll.result_bytes,
+                wire_bytes=coll.wire_bytes,
+                counts=coll.counts,
+            ),
+            roofline=roof.as_dict(),
+            hlo_bytes=len(txt),
+        )
+        if verbose:
+            live = (
+                mem.argument_size_in_bytes
+                - mem.alias_size_in_bytes
+                + mem.temp_size_in_bytes
+            )
+            print(
+                f"[ok] {arch} x {shape_name} x {rec['mesh']}: "
+                f"compile {rec['compile_s']}s, "
+                f"args {mem.argument_size_in_bytes/2**30:.2f} GiB/dev, "
+                f"temps {mem.temp_size_in_bytes/2**30:.2f} GiB/dev, "
+                f"dominant={roof.dominant} "
+                f"(c={roof.compute_s:.3e}s m={roof.memory_s:.3e}s k={roof.collective_s:.3e}s) "
+                f"useful={roof.useful_ratio:.2f}",
+                flush=True,
+            )
+    except Exception as e:  # noqa: BLE001 - record failures, don't die
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {rec['mesh']}: {e}", flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    fn = f"{arch}__{shape_name}__{rec['mesh'].replace('x','_')}{suffix}.json"
+    with open(os.path.join(out_dir, fn), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for a, s in combos:
+        mesh_tag = "2_16_16" if args.multi_pod else "16_16"
+        fn = os.path.join(args.out, f"{a}__{s}__{mesh_tag}.json")
+        if args.skip_existing and os.path.exists(fn):
+            with open(fn) as f:
+                if json.load(f).get("ok"):
+                    n_ok += 1
+                    print(f"[skip] {a} x {s} x {mesh_tag} (cached ok)", flush=True)
+                    continue
+        rec = run_one(a, s, multi_pod=args.multi_pod, out_dir=args.out,
+                      variant=args.variant)
+        n_ok += bool(rec.get("ok"))
+    print(f"dry-run: {n_ok}/{len(combos)} ok", flush=True)
+    return 0 if n_ok == len(combos) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The dry-run launcher forces 512
+host devices via XLA_FLAGS *before* any jax import.
+
+Target hardware: TPU v5e pods, 256 chips/pod (16x16 ICI torus); multi-pod =
+2 pods over DCN. Axes: 'data' (FSDP+DP), 'model' (tensor parallel), 'pod'
+(pure DP over DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices the host actually has (tests)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))

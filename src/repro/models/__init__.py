@@ -1,0 +1,25 @@
+from repro.models.model import (
+    find_period,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    signature,
+    softmax_xent,
+)
+
+__all__ = [
+    "find_period",
+    "forward",
+    "init_caches",
+    "init_params",
+    "loss_fn",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+    "signature",
+    "softmax_xent",
+]

@@ -1,0 +1,71 @@
+"""Distributed flash-decoding over a length-sharded KV cache.
+
+When GQA kv-heads cannot shard across the TP axis, the KV cache shards by
+LENGTH; naive GSPMD attention then all-gathers the whole cache every
+decoded token (~1 GB/layer at 32k, measured: 52 GB/step on
+qwen3-moe-30b-a3b decode_32k). This shard_map computes attention locally
+per cache shard and combines with logsumexp statistics - per layer the
+cross-shard traffic is a psum of (B, H, hd) partials + (B, H) stats.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distribution import context as ctx
+
+NEG = -1e30
+
+
+def flash_decode(
+    q: jax.Array,  # (B, 1, H, hd) - replicated over the model axis
+    ck: jax.Array,  # (B, L, KH, hd) - L sharded over the model axis
+    cv: jax.Array,
+    cache_index: jax.Array,  # scalar: current absolute position
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    mesh = ctx._STATE["mesh"]
+    batch_ax = ctx._STATE["batch"]
+    model_ax = ctx._STATE["model"]
+    b, _, h, hd = q.shape
+    kh = ck.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(hd)
+
+    def local(qc, kc, vc, idx):
+        # qc (b_loc, 1, H, hd); kc/vc (b_loc, L_loc, KH, hd)
+        l_loc = kc.shape[1]
+        shard = jax.lax.axis_index(model_ax)
+        kpos = shard * l_loc + jnp.arange(l_loc)
+        ok = kpos <= idx
+        if window is not None:
+            ok &= kpos > idx - window
+        kr = jnp.repeat(kc, g, axis=2).astype(jnp.float32)
+        vr = jnp.repeat(vc, g, axis=2).astype(jnp.float32)
+        s = jnp.einsum("bhd,bkhd->bhk", qc[:, 0].astype(jnp.float32), kr) * scale
+        # (b, H, L_loc)
+        s = jnp.where(ok[None, None, :], s, NEG)
+        m_loc = s.max(axis=-1)  # (b, H)
+        m = jax.lax.pmax(m_loc, model_ax)
+        p = jnp.exp(s - m[..., None])
+        p = jnp.where(ok[None, None, :], p, 0.0)
+        l_sum = jax.lax.psum(p.sum(axis=-1), model_ax)  # (b, H)
+        out = jax.lax.psum(jnp.einsum("bhk,bkhd->bhd", p, vr), model_ax)
+        out = out / jnp.maximum(l_sum[..., None], 1e-30)
+        return out[:, None].astype(qc.dtype)  # (b, 1, H, hd)
+
+    qspec = P(batch_ax, None, None, None)
+    cspec = P(batch_ax, model_ax, None, None)
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(qspec, cspec, cspec, P()),
+        out_specs=qspec,
+        check_rep=False,
+    )(q, ck, cv, cache_index)

@@ -1,0 +1,33 @@
+"""Modality frontend STUBS (per assignment carve-out).
+
+The ViT / codec encoders are NOT implemented; ``input_specs`` supplies
+precomputed patch/frame embeddings of the right shape. The only learned
+piece here is the projector that maps frontend features into d_model.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# feature dims the (stub) encoders would emit
+FRONTEND_DIMS = {"vision": 1024, "audio": 128}
+
+
+def init_frontend(key, cfg: ModelConfig, dtype=jnp.float32):
+    d_in = FRONTEND_DIMS[cfg.frontend]
+    k1, k2 = jax.random.split(key)
+    return {
+        "proj": (jax.random.normal(k1, (d_in, cfg.d_model)) / math.sqrt(d_in)).astype(dtype),
+        "bias": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def frontend_apply(params, feats: jax.Array) -> jax.Array:
+    """feats: (B, F, d_in) -> (B, F, d_model)."""
+    return jnp.einsum("bfd,de->bfe", feats, params["proj"].astype(feats.dtype)) + params[
+        "bias"
+    ].astype(feats.dtype)

@@ -1,0 +1,410 @@
+"""Decoder LM assembly: embedding -> scan over layer groups -> logits.
+
+Architecture-generic: the per-layer ``signature`` (block kind A/M, MoE flag,
+MLP presence) is derived from the config; layers are grouped into the
+smallest repeating period so ``jax.lax.scan`` keeps compile time O(period),
+not O(depth) - essential for 94-96 layer models on the dry-run host.
+
+KV/SSM caches are threaded through the same scan as stacked xs/ys.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distribution.context import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.frontends import FRONTEND_DIMS, init_frontend, frontend_apply
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# layer signatures and period grouping
+# ---------------------------------------------------------------------------
+
+
+def signature(cfg: ModelConfig):
+    """Per-layer (kind, is_moe, has_mlp)."""
+    sig = []
+    for i in range(cfg.num_layers):
+        kind = cfg.pattern[i]
+        is_moe = cfg.is_moe_block(i) and (kind == "A" or cfg.arch_type == "hybrid")
+        has_mlp = kind == "A" or cfg.arch_type == "hybrid"
+        sig.append((kind, is_moe, has_mlp))
+    return tuple(sig)
+
+
+def find_period(sig) -> int:
+    n = len(sig)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(sig[i] == sig[i % p] for i in range(n)):
+            return p
+    return n
+
+
+# ---------------------------------------------------------------------------
+# per-slot block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, slot_sig, dtype=jnp.float32):
+    kind, is_moe, has_mlp = slot_sig
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "A":
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = S.init_mamba(ks[0], cfg, dtype)
+    if has_mlp:
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        if is_moe:
+            p["moe"] = L.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def block_apply(
+    p,
+    x: Array,
+    cfg: ModelConfig,
+    slot_sig,
+    *,
+    positions,
+    cache=None,
+    cache_index=None,
+    impl: str = "auto",
+):
+    """One residual block. Returns (x, new_cache, aux)."""
+    kind, is_moe, has_mlp = slot_sig
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "A":
+        out, new_kv = L.attention_apply(
+            p["attn"], h, cfg, positions=positions,
+            kv_cache=None if cache is None else {"k": cache["k"], "v": cache["v"]},
+            cache_index=cache_index, impl=impl,
+        )
+        new_cache = {} if new_kv is None else new_kv
+    else:
+        out, (new_ssm, new_conv) = S.mamba_apply(
+            p["mamba"], h, cfg,
+            ssm_state=None if cache is None else cache["ssm"],
+            conv_state=None if cache is None else cache["conv"],
+            use_pallas=(impl == "pallas"),
+        )
+        new_cache = {"ssm": new_ssm, "conv": new_conv}
+        if cache is None:
+            new_cache = {}
+    x = x + out
+    if has_mlp:
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if is_moe:
+            from repro.distribution.context import moe_a2a_enabled
+            from repro.models.moe_a2a import a2a_applicable, moe_apply_a2a
+
+            if moe_a2a_enabled() and a2a_applicable(cfg):
+                y, aux = moe_apply_a2a(p["moe"], h2, cfg)
+            else:
+                y, aux = L.moe_apply(p["moe"], h2, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], h2, cfg.activation)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    sig = signature(cfg)
+    period = find_period(sig)
+    repeats = cfg.num_layers // period
+    keys = jax.random.split(key, period + 3)
+    slots = []
+    for si in range(period):
+        slot_keys = jax.random.split(keys[si], repeats)
+        slots.append(jax.vmap(lambda k: init_block(k, cfg, sig[si], dtype))(slot_keys))
+    params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(
+            dtype
+        ),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "slots": tuple(slots),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size))
+            / math.sqrt(cfg.d_model)
+        ).astype(dtype)
+    if cfg.frontend != "none":
+        params["frontend"] = init_frontend(keys[-3], cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Per-slot stacked caches (leading dim = repeats)."""
+    sig = signature(cfg)
+    period = find_period(sig)
+    repeats = cfg.num_layers // period
+    kv_len = (
+        min(cache_len, cfg.attention_window)
+        if cfg.attention_window is not None
+        else cache_len
+    )
+    caches = []
+    for si in range(period):
+        kind, _, _ = sig[si]
+        if kind == "A":
+            shape = (repeats, batch, kv_len, cfg.num_kv_heads, cfg.head_dim)
+            caches.append({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)})
+        else:
+            sc = cfg.ssm
+            di = sc.d_inner(cfg.d_model)
+            nh = sc.num_heads(cfg.d_model)
+            caches.append(
+                {
+                    "ssm": jnp.zeros(
+                        (repeats, batch, nh, sc.head_dim, sc.d_state), jnp.float32
+                    ),
+                    "conv": jnp.zeros(
+                        (repeats, batch, sc.d_conv - 1, di + 2 * sc.d_state), dtype
+                    ),
+                }
+            )
+    return tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params,
+    tokens: Array,
+    cfg: ModelConfig,
+    *,
+    caches=None,
+    cache_index=None,
+    frontend_feats: Optional[Array] = None,
+    impl: str = "auto",
+    remat: bool = False,
+    unroll: bool = False,
+    compute_dtype=jnp.bfloat16,
+):
+    """tokens: (B, S) int32. Returns (logits, new_caches, aux_loss).
+
+    frontend_feats: (B, F, d_frontend) stub modality embeddings, prepended.
+    """
+    sig = signature(cfg)
+    period = find_period(sig)
+    b, s_tok = tokens.shape
+
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = constrain(x, {0: "batch"})
+    if frontend_feats is not None:
+        fe = frontend_apply(params["frontend"], frontend_feats.astype(compute_dtype))
+        x = jnp.concatenate([fe, x], axis=1)
+    s = x.shape[1]
+    if cache_index is None:
+        positions = jnp.arange(s)
+    else:
+        positions = cache_index + jnp.arange(s)
+
+    def body(carry, xs):
+        xact, aux = carry
+        slot_params, slot_caches = xs
+
+        def inner(xact, aux, slot_params, slot_caches):
+            new_caches = []
+            for si in range(period):
+                cache = None
+                if caches is not None:
+                    cache = slot_caches[si]
+                xact, nc, a = block_apply(
+                    slot_params[si], xact, cfg, sig[si],
+                    positions=positions, cache=cache, cache_index=cache_index,
+                    impl=impl,
+                )
+                xact = constrain(xact, {0: "batch"})
+                new_caches.append(nc)
+                aux = aux + a
+            return xact, aux, tuple(new_caches)
+
+        if remat:
+            # NOTE: save_only_these_names("moe_a2a") was measured (SPerf
+            # pair 1, iter 5b): it cuts the exchange 3786->... but pins
+            # ~2.3 TB/dev of buffers - recompute is the right side of the
+            # trade at 16 GiB/chip, so nothing is saved.
+            f = jax.checkpoint(inner, policy=jax.checkpoint_policies.nothing_saveable)
+        else:
+            f = inner
+        xact, aux, new_caches = f(xact, aux, slot_params, slot_caches)
+        return (xact, aux), new_caches
+
+    caches_xs = tuple({} for _ in range(period))
+    aux0 = jnp.zeros((), jnp.float32)
+    if unroll:
+        # python-loop unroll: true per-layer HLO (exact flop/collective
+        # accounting in the dry-run; scan counts the body only once)
+        repeats = cfg.num_layers // period
+        carry = (x, aux0)
+        ys = []
+        for r in range(repeats):
+            sp = jax.tree.map(lambda a: a[r], params["slots"])
+            cc = jax.tree.map(lambda a: a[r], caches) if caches is not None else caches_xs
+            carry, nc = body(carry, (sp, cc))
+            ys.append(nc)
+        (x, aux) = carry
+        if caches is None:
+            new_caches = None
+        else:
+            new_caches = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    elif caches is None:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, sp: body(c, (sp, caches_xs)),
+            (x, aux0),
+            params["slots"],
+        )
+        new_caches = None
+    else:
+        (x, aux), new_caches = jax.lax.scan(
+            body,
+            (x, aux0),
+            (params["slots"], caches),
+        )
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, {0: "batch", 2: "model"})
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# losses and steps
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: Array, labels: Array, mask: Optional[Array] = None):
+    """logits: (B,S,V) ; labels: (B,S) int32; mask: (B,S) 1=count."""
+    logits = constrain(logits.astype(jnp.float32), {0: "batch", 2: "model"})
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, impl="auto", remat=True, unroll=False):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    frontend = batch.get("frontend")
+    logits, _, aux = forward(
+        params, tokens, cfg, frontend_feats=frontend, impl=impl, remat=remat,
+        unroll=unroll,
+    )
+    if frontend is not None:
+        # loss only over the text region (frontend positions are prefix)
+        f = logits.shape[1] - labels.shape[1]
+        logits = logits[:, f:]
+    loss = softmax_xent(logits, labels, batch.get("mask"))
+    return loss + aux, (loss, aux)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, impl="auto", remat=True, unroll=False,
+                    compute_copy_dtype=None, param_shardings_tree=None):
+    """compute_copy_dtype: when set (e.g. jnp.bfloat16), matrix params are
+    cast to it ONCE per step before the forward pass, so FSDP all-gathers
+    and all weight reads move half the bytes; the f32 master copy and the
+    optimizer update stay full precision (classic mixed precision).
+
+    param_shardings_tree: when given, the casted copy is PINNED to the same
+    sharding as the master param - without this, GSPMD hoists the FSDP
+    all-gather ABOVE the convert and gathers f32 anyway (measured, SPerf
+    iteration 3)."""
+
+    def cast_tree(p):
+        if compute_copy_dtype is None:
+            return p
+
+        def one(a, sh=None):
+            if a.dtype == jnp.float32 and a.ndim >= 2:
+                a = a.astype(compute_copy_dtype)
+                if sh is not None:
+                    a = jax.lax.with_sharding_constraint(a, sh)
+            return a
+
+        if param_shardings_tree is None:
+            return jax.tree.map(one, p)
+        return jax.tree.map(one, p, param_shardings_tree)
+
+    def train_step(params, opt_state, batch):
+        if compute_copy_dtype is None:
+            (total, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, cfg, impl=impl, remat=remat, unroll=unroll
+            )
+        else:
+            # differentiate wrt the LOW-PRECISION copy: the gradient
+            # reduction (the dominant train collective) then moves
+            # compute_copy_dtype bytes, and the f32 master update follows.
+            params_c = cast_tree(params)
+            (total, (loss, aux)), grads_c = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, impl=impl, remat=remat,
+                                  unroll=unroll),
+                has_aux=True,
+            )(params_c)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads_c, params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        from repro.optim.optimizers import apply_updates
+
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "aux": aux, "total": total}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, impl="auto", unroll=False,
+                      compute_dtype=jnp.bfloat16):
+    def prefill(params, tokens, caches, frontend_feats=None):
+        logits, new_caches, _ = forward(
+            params, tokens, cfg, caches=caches, cache_index=jnp.zeros((), jnp.int32),
+            frontend_feats=frontend_feats, impl=impl, remat=False, unroll=unroll,
+            compute_dtype=compute_dtype,
+        )
+        return logits[:, -1], new_caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, impl="auto", unroll=False,
+                     compute_dtype=jnp.bfloat16):
+    def decode(params, tokens, caches, cache_index):
+        """tokens: (B, 1); cache_index: scalar int32 (tokens already seen)."""
+        logits, new_caches, _ = forward(
+            params, tokens, cfg, caches=caches, cache_index=cache_index,
+            impl=impl, remat=False, unroll=unroll, compute_dtype=compute_dtype,
+        )
+        return logits[:, -1], new_caches
+
+    return decode

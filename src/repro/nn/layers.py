@@ -1,0 +1,100 @@
+"""Tiny pure-JAX NN library for the RL networks (no flax on this box).
+
+Params are nested dicts of jnp arrays; every layer is an (init, apply)
+pair. Used by the ICM-CA SAC agent, PPO, and DQN.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else math.sqrt(2.0 / d_in)
+    return {
+        "w": jax.random.normal(key, (d_in, d_out)) * scale,
+        "b": jnp.zeros((d_out,)),
+    }
+
+
+def dense_apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_layernorm(d: int):
+    return {"g": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def init_mlp(key, dims: Sequence[int]):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {"layers": [init_dense(k, a, b) for k, a, b in zip(ks, dims[:-1], dims[1:])]}
+
+
+def mlp_apply(p, x, act=jax.nn.relu, final_act=None):
+    n = len(p["layers"])
+    for i, lp in enumerate(p["layers"]):
+        x = dense_apply(lp, x)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def init_residual_mlp(key, d_in: int, d_hidden: int, n_blocks: int, d_out: int):
+    """MLP with residual blocks (paper's ICM feature extractor)."""
+    ks = jax.random.split(key, n_blocks * 2 + 2)
+    blocks = []
+    for i in range(n_blocks):
+        blocks.append(
+            {
+                "fc1": init_dense(ks[2 * i], d_hidden, d_hidden),
+                "fc2": init_dense(ks[2 * i + 1], d_hidden, d_hidden),
+                "ln": init_layernorm(d_hidden),
+            }
+        )
+    return {
+        "inp": init_dense(ks[-2], d_in, d_hidden),
+        "blocks": blocks,
+        "out": init_dense(ks[-1], d_hidden, d_out),
+    }
+
+
+def residual_mlp_apply(p, x, final_act=None):
+    h = jax.nn.relu(dense_apply(p["inp"], x))
+    for b in p["blocks"]:
+        r = jax.nn.relu(dense_apply(b["fc1"], layernorm_apply(b["ln"], h)))
+        h = h + dense_apply(b["fc2"], r)
+    out = dense_apply(p["out"], h)
+    return final_act(out) if final_act is not None else out
+
+
+def init_gru(key, d_in: int, d_hidden: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = math.sqrt(1.0 / d_hidden)
+    return {
+        "wi": jax.random.normal(k1, (d_in, 3 * d_hidden)) * s,
+        "wh": jax.random.normal(k2, (d_hidden, 3 * d_hidden)) * s,
+        "b": jnp.zeros((3 * d_hidden,)),
+    }
+
+
+def gru_apply(p, h, x):
+    """Standard GRU cell. h: (..., H), x: (..., D) -> new h."""
+    gi = x @ p["wi"] + p["b"]
+    gh = h @ p["wh"]
+    i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
+    h_r, h_z, h_n = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    return (1 - z) * n + z * h

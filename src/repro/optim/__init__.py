@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_warmup_cosine,
+    sgd_momentum,
+)
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "sgd_momentum",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

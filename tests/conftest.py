@@ -1,0 +1,35 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:
+    """Run a python snippet in a subprocess with a forced host device count.
+
+    Tests in THIS process keep the default single device (per the dry-run
+    contract); multi-device behaviour is exercised in clean subprocesses.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+        cwd=REPO,
+    )
+    assert out.returncode == 0, f"subprocess failed:\nSTDOUT:{out.stdout}\nSTDERR:{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

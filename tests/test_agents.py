@@ -1,0 +1,164 @@
+"""RL agent unit tests: masking, ICM, cross-attention, update steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.agents import action_space as A
+from repro.core.agents import icm as ICM
+from repro.core.agents import sac as SAC
+from repro.core.agents.attention import cross_attention, init_cross_attention
+from repro.core.env import MHSLEnv
+from repro.core.profiles import resnet101_profile
+
+
+@pytest.fixture(scope="module")
+def env():
+    return MHSLEnv(profile=resnet101_profile(batch=1))
+
+
+def test_masked_sampling_never_picks_invalid(env):
+    dims = env.action_dims
+    key = jax.random.PRNGKey(0)
+    logits = {
+        "u": jnp.zeros((dims["u"],)),
+        "size": jnp.zeros((dims["size"],)),
+        "decoys": jnp.zeros((dims["decoys"], 2)),
+        "p_tx": jnp.zeros((dims["p_tx"],)),
+        "p_d": jnp.zeros((dims["p_d"],)),
+    }
+    masks = {
+        "u": jnp.array([True, False, True, False, False, False]),
+        "size": jnp.array([True, False, False, False]),
+        "decoys": jnp.array([False, True, False, True, False, False]),
+        "p_tx": jnp.ones(dims["p_tx"], bool),
+        "p_d": jnp.ones(dims["p_d"], bool),
+    }
+    ml = A.masked_logits(logits, masks)
+    for i in range(200):
+        key, k = jax.random.split(key)
+        a = A.sample(k, ml)
+        assert int(a["u"]) in (0, 2)
+        assert int(a["size"]) == 0
+        d = np.asarray(a["decoys"])
+        assert d[0] == 0 and d[2] == 0 and d[4] == 0 and d[5] == 0
+
+
+def test_log_prob_and_entropy_shapes(env):
+    dims = env.action_dims
+    bs = 7
+    logits = {
+        "u": jnp.zeros((bs, dims["u"])),
+        "size": jnp.zeros((bs, dims["size"])),
+        "decoys": jnp.zeros((bs, dims["decoys"], 2)),
+        "p_tx": jnp.zeros((bs, dims["p_tx"])),
+        "p_d": jnp.zeros((bs, dims["p_d"])),
+    }
+    action = {
+        "u": jnp.zeros((bs,), jnp.int32),
+        "size": jnp.zeros((bs,), jnp.int32),
+        "decoys": jnp.zeros((bs, dims["decoys"]), jnp.int32),
+        "p_tx": jnp.zeros((bs,), jnp.int32),
+        "p_d": jnp.zeros((bs,), jnp.int32),
+    }
+    lp = A.log_prob(logits, action)
+    ent = A.entropy(logits)
+    assert lp.shape == (bs,) and ent.shape == (bs,)
+    # uniform logits: lp = -sum(log |head|)
+    want = -(np.log(dims["u"]) + np.log(dims["size"]) + dims["decoys"] * np.log(2)
+             + np.log(dims["p_tx"]) + np.log(dims["p_d"]))
+    np.testing.assert_allclose(np.asarray(lp), want, rtol=1e-5)
+
+
+def test_icm_features_bounded(env):
+    dims = env.action_dims
+    params = ICM.init_icm(jax.random.PRNGKey(0), env.obs_dim, dims)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (5, env.obs_dim)) * 3
+    phi = ICM.features(params, obs)
+    assert float(phi.min()) >= 0.0 and float(phi.max()) <= 1.0  # Lemma 1 premise
+
+
+def test_icm_losses_finite_and_reward_nonneg(env):
+    dims = env.action_dims
+    params = ICM.init_icm(jax.random.PRNGKey(0), env.obs_dim, dims)
+    bs = 6
+    obs = jax.random.normal(jax.random.PRNGKey(1), (bs, env.obs_dim))
+    obs2 = jax.random.normal(jax.random.PRNGKey(2), (bs, env.obs_dim))
+    action = {
+        "u": jnp.zeros((bs,), jnp.int32),
+        "size": jnp.ones((bs,), jnp.int32),
+        "decoys": jnp.zeros((bs, dims["decoys"]), jnp.int32),
+        "p_tx": jnp.zeros((bs,), jnp.int32),
+        "p_d": jnp.zeros((bs,), jnp.int32),
+    }
+    avec = A.onehot(action, dims)
+    l_i, l_f, r_c = ICM.icm_losses(params, obs, obs2, action, avec, dims)
+    assert np.isfinite(float(l_i)) and np.isfinite(float(l_f))
+    assert float(r_c.min()) >= 0.0
+
+
+def test_cross_attention_masked_history():
+    obs_dim, pair_dim, I = 10, 14, 4
+    p = init_cross_attention(jax.random.PRNGKey(0), obs_dim, pair_dim, attn_dim=8)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (obs_dim,))
+    hist = jax.random.normal(jax.random.PRNGKey(2), (I, pair_dim))
+    m_none = jnp.zeros((I,))
+    out0 = cross_attention(p, obs, hist, m_none)
+    # empty history -> attended part is zeros, obs passes through
+    np.testing.assert_allclose(np.asarray(out0[:obs_dim]), np.asarray(obs), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out0[obs_dim:]), 0.0, atol=1e-6)
+    m_one = jnp.array([0.0, 0.0, 0.0, 1.0])
+    out1 = cross_attention(p, obs, hist, m_one)
+    # with one valid pair, attended output == its value projection
+    want = hist[3] @ p["wv"]
+    np.testing.assert_allclose(np.asarray(out1[obs_dim:]), np.asarray(want), rtol=1e-4)
+
+
+def test_sac_update_runs_and_reduces_critic_loss(env):
+    dims = env.action_dims
+    cfg = SAC.SACConfig(hidden=32, feat_dim=8, attn_dim=8, batch=16)
+    params = SAC.init_agent(jax.random.PRNGKey(0), env.obs_dim, dims, cfg)
+    update, init_opt = SAC.make_update(dims, cfg)
+    opt_state = init_opt(params)
+    bs = 16
+    key = jax.random.PRNGKey(1)
+    pair_dim = env.obs_dim + A.flat_dim(dims)
+    batch = {
+        "obs": jax.random.normal(key, (bs, env.obs_dim)),
+        "obs_next": jax.random.normal(key, (bs, env.obs_dim)),
+        "hist": jnp.zeros((bs, cfg.hist_len, pair_dim)),
+        "hist_mask": jnp.zeros((bs, cfg.hist_len)),
+        "action": {
+            "u": jnp.zeros((bs,), jnp.int32),
+            "size": jnp.zeros((bs,), jnp.int32),
+            "decoys": jnp.zeros((bs, dims["decoys"]), jnp.int32),
+            "p_tx": jnp.zeros((bs,), jnp.int32),
+            "p_d": jnp.zeros((bs,), jnp.int32),
+        },
+        "masks": {
+            "u": jnp.ones((bs, dims["u"]), bool),
+            "size": jnp.ones((bs, dims["size"]), bool),
+            "decoys": jnp.ones((bs, dims["decoys"]), bool),
+            "p_tx": jnp.ones((bs, dims["p_tx"]), bool),
+            "p_d": jnp.ones((bs, dims["p_d"]), bool),
+        },
+        "reward": jnp.full((bs,), -1.0),
+        "done": jnp.zeros((bs,)),
+    }
+    losses = []
+    for i in range(30):
+        params, opt_state, m = update(params, opt_state, batch)
+        losses.append(float(m["critic_loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0]
+
+
+def test_sac_ablation_variants_init(env):
+    dims = env.action_dims
+    for use_icm, use_ca in [(True, True), (False, True), (True, False), (False, False)]:
+        cfg = SAC.SACConfig(use_icm=use_icm, use_ca=use_ca, hidden=16, feat_dim=4)
+        p = SAC.init_agent(jax.random.PRNGKey(0), env.obs_dim, dims, cfg)
+        assert ("icm" in p) == use_icm
+        assert ("ca" in p["actor"]) == use_ca
+        update, init_opt = SAC.make_update(dims, cfg)
+        init_opt(p)  # must not raise

@@ -1,0 +1,66 @@
+"""Config system: published sizes, reductions, shape registry."""
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, all_configs, get_config, get_shape
+
+# published total / active parameter counts (billions) with tolerance
+PUBLISHED = {
+    "qwen3-moe-235b-a22b": (235.0, 22.0),
+    "nemotron-4-340b": (340.0, 340.0),
+    "qwen2.5-3b": (3.1, 3.1),
+    "jamba-v0.1-52b": (52.0, 12.0),
+    "minitron-4b": (4.2, 4.2),
+    "pixtral-12b": (12.3, 12.3),
+    "musicgen-large": (2.4, 2.4),  # decoder backbone only (frontend stubbed)
+    "mamba2-370m": (0.37, 0.37),
+    "stablelm-1.6b": (1.6, 1.6),
+    "qwen3-moe-30b-a3b": (30.5, 3.3),
+}
+
+
+def test_all_archs_registered():
+    assert len(ARCH_IDS) == 10
+    cfgs = all_configs()
+    assert set(cfgs) == set(ARCH_IDS)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    total, active = PUBLISHED[arch]
+    got_total = cfg.param_count() / 1e9
+    got_active = cfg.active_param_count() / 1e9
+    assert abs(got_total - total) / total < 0.08, (arch, got_total, total)
+    assert abs(got_active - active) / active < 0.12, (arch, got_active, active)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_variants_are_smoke_sized(arch):
+    rc = get_config(arch).reduced()
+    assert rc.num_layers == 2
+    assert rc.d_model <= 512
+    if rc.moe.enabled:
+        assert rc.moe.num_experts <= 4
+    assert rc.vocab_size <= 1024
+
+
+def test_shapes_registry():
+    assert [s.name for s in INPUT_SHAPES] == [
+        "train_4k", "prefill_32k", "decode_32k", "long_500k",
+    ]
+    s = get_shape("train_4k")
+    assert s.seq_len == 4096 and s.global_batch == 256 and s.kind == "train"
+    s = get_shape("long_500k")
+    assert s.seq_len == 524288 and s.global_batch == 1 and s.kind == "decode"
+    with pytest.raises(KeyError):
+        get_shape("nope")
+
+
+def test_pattern_structure():
+    jamba = get_config("jamba-v0.1-52b")
+    assert jamba.pattern.count("A") == 4  # 1:7 attention:mamba over 32 layers
+    assert jamba.pattern.count("M") == 28
+    mamba = get_config("mamba2-370m")
+    assert set(mamba.pattern) == {"M"}
+    assert get_config("qwen2.5-3b").qkv_bias
+    assert get_config("nemotron-4-340b").activation == "relu2"

@@ -1,0 +1,150 @@
+"""MHSL environment invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import NetworkConfig
+from repro.core.env import MHSLEnv, NBINS, OMEGA_1, OMEGA_2
+from repro.core.profiles import resnet101_profile, transformer_profile
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="module")
+def env():
+    return MHSLEnv(profile=resnet101_profile(batch=1))
+
+
+def _rand_action(env, key, masks):
+    ks = jax.random.split(key, 5)
+    return {
+        "u": jax.random.categorical(ks[0], jnp.where(masks["u"], 0.0, -1e9)),
+        "size": jax.random.categorical(ks[1], jnp.where(masks["size"], 0.0, -1e9)),
+        "decoys": (jax.random.uniform(ks[2], masks["decoys"].shape) < 0.5).astype(jnp.int32)
+        * masks["decoys"],
+        "p_tx": jax.random.randint(ks[3], (), 0, env.num_power_levels),
+        "p_d": jax.random.randint(ks[4], (), 0, env.num_power_levels),
+    }
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_episode_invariants(seed):
+    env = MHSLEnv(profile=resnet101_profile(batch=1))
+    key = jax.random.PRNGKey(seed)
+    st_ = env.reset(key)
+    lmax = env.L
+    prev_t = float(st_.t_r)
+    prev_e = float(st_.e_r)
+    for i in range(env.episode_len):
+        key, ka, ks = jax.random.split(key, 3)
+        masks = env.action_masks(st_)
+        a = _rand_action(env, ka, masks)
+        st_, r, done, info = env.step(st_, a, ks)
+        # budgets never increase
+        assert float(st_.t_r) <= prev_t + 1e-6
+        assert float(st_.e_r) <= prev_e + 1e-6
+        prev_t, prev_e = float(st_.t_r), float(st_.e_r)
+        # reward bounded per Lemma 1 discussion
+        assert float(r) <= 0.0
+        assert float(r) >= -(env.E * env.leak_scale + OMEGA_1 + OMEGA_2)
+    assert bool(done)
+    # split-plan conservation: boundaries strictly increasing to L
+    b = np.asarray(st_.boundaries)
+    assert b[-1] == lmax
+    assert np.all(np.diff(b) >= 1)
+    # exactly S-1 devices + server assigned
+    sd = np.asarray(st_.stage_dev)
+    assert sd[-1] == env.U  # server holds the last stage
+    assert len(set(sd.tolist())) == env.S  # all distinct
+
+
+def test_masks_prevent_double_assignment(env):
+    key = jax.random.PRNGKey(0)
+    st_ = env.reset(key)
+    chosen = []
+    for i in range(env.S - 1):
+        key, ka, ks = jax.random.split(key, 3)
+        masks = env.action_masks(st_)
+        m = np.asarray(masks["u"])
+        for c in chosen:
+            assert not m[c], "already-assigned device must be masked"
+        a = _rand_action(env, ka, masks)
+        chosen.append(int(a["u"]))
+        st_, *_ = env.step(st_, a, ks)
+
+
+def test_decoys_exclude_tx_rx(env):
+    """The EFFECTIVE decoy set (env.step enforcement, Eq. 14b) never
+    contains the transmitter or receiver, even if the agent asked for
+    them; the mask already excludes the transmitter ahead of time."""
+    key = jax.random.PRNGKey(1)
+    st_ = env.reset(key)
+    for i in range(env.episode_len):
+        key, ka, ks = jax.random.split(key, 3)
+        masks = env.action_masks(st_)
+        a = _rand_action(env, ka, masks)
+        a["decoys"] = jnp.ones_like(a["decoys"])  # adversarial: ask for all
+        st2, r, done, info = env.step(st_, a, ks)
+        tx, rx = int(info["tx"]), int(info["rx"])
+        dp = np.asarray(info["decoy_p"])
+        if int(st_.n) >= 2:
+            if tx < env.U:
+                assert dp[tx] == 0.0
+            if rx < env.U:
+                assert dp[rx] == 0.0
+            m = np.asarray(masks["decoys"])
+            if tx < env.U:
+                assert not m[tx]
+        st_ = st2
+
+
+def test_no_decoys_increases_leak_risk(env):
+    """With all decoys off, expected leakage over many episodes is larger
+    than with full decoys at max power (paper's core premise)."""
+    def run(decoys_on, seed):
+        key = jax.random.PRNGKey(seed)
+        st_ = env.reset(jax.random.PRNGKey(7))  # fixed geometry
+        tot = 0.0
+        for i in range(env.episode_len):
+            key, ka, ks = jax.random.split(key, 3)
+            masks = env.action_masks(st_)
+            a = _rand_action(env, ka, masks)
+            a["decoys"] = masks["decoys"].astype(jnp.int32) * (1 if decoys_on else 0)
+            a["p_d"] = jnp.array(env.num_power_levels - 1)
+            a["p_tx"] = jnp.array(1)
+            st_, r, done, info = env.step(st_, a, ks)
+            tot += float(info["leak"])
+        return tot
+
+    leak_off = np.mean([run(False, s) for s in range(8)])
+    leak_on = np.mean([run(True, s) for s in range(8)])
+    assert leak_on <= leak_off + 1e-6
+
+
+def test_transformer_profile_env_runs():
+    cfg = get_config("qwen2.5-3b")
+    prof = transformer_profile(cfg, batch=1, seq=128)
+    env = MHSLEnv(profile=prof)
+    key = jax.random.PRNGKey(0)
+    st_ = env.reset(key)
+    for i in range(env.episode_len):
+        key, ka, ks = jax.random.split(key, 3)
+        a = _rand_action(env, ka, env.action_masks(st_))
+        st_, r, done, info = env.step(st_, a, ks)
+        assert np.isfinite(float(r))
+    assert int(np.asarray(st_.boundaries)[-1]) == cfg.num_layers
+
+
+def test_observe_shape_and_location_blinding():
+    prof = resnet101_profile(batch=1)
+    env_known = MHSLEnv(profile=prof, know_eave_locations=True)
+    env_blind = MHSLEnv(profile=prof, know_eave_locations=False)
+    st_ = env_known.reset(jax.random.PRNGKey(0))
+    o1 = env_known.observe(st_)
+    o2 = env_blind.observe(st_)
+    assert o1.shape == (env_known.obs_dim,)
+    # blinded obs zeroes the eavesdropper distances, all else equal
+    diff = np.flatnonzero(np.asarray(o1) != np.asarray(o2))
+    assert len(diff) <= env_known.E

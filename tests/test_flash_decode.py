@@ -1,0 +1,116 @@
+"""Distributed flash-decoding (shard_map over length-sharded KV caches).
+
+This is the SPerf pair-3 optimization (176x collective reduction on
+qwen3-moe-30b decode_32k); exactness vs the dense oracle is load-bearing.
+"""
+
+
+def test_flash_decode_exact(subproc):
+    out = subproc(
+        """
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_host_mesh
+from repro.distribution.context import activation_sharding
+from repro.models.flash_decode import flash_decode
+from repro.kernels.ref import flash_attention_ref
+
+mesh = make_host_mesh(2, 2)
+B, L, H, KH, hd = 4, 32, 4, 2, 16
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (B,1,H,hd))
+ck = jax.random.normal(ks[1], (B,L,KH,hd))
+cv = jax.random.normal(ks[2], (B,L,KH,hd))
+for idx in (0, 7, 19, 31):
+    with activation_sharding(mesh, ('data',)):
+        out = jax.jit(lambda q,k,v,i: flash_decode(q,k,v,i))(q, ck, cv, jnp.array(idx))
+    ref = flash_attention_ref(q, ck[:, :idx+1], cv[:, :idx+1], causal=True, q_offset=idx)
+    err = float(jnp.abs(out - ref).max())
+    assert err < 1e-5, (idx, err)
+    with activation_sharding(mesh, ('data',)):
+        outw = jax.jit(lambda q,k,v,i: flash_decode(q,k,v,i,window=8))(q, ck, cv, jnp.array(idx))
+    refw = flash_attention_ref(q, ck[:, :idx+1], cv[:, :idx+1], causal=True, window=8, q_offset=idx)
+    assert float(jnp.abs(outw - refw).max()) < 1e-5, idx
+print('FLASH_DECODE_OK')
+""",
+        n_devices=4,
+    )
+    assert "FLASH_DECODE_OK" in out
+
+
+def test_decode_step_uses_flash_decode_under_context(subproc):
+    """End-to-end: a sharded decode step with kh not divisible by TP routes
+    through flash_decode and matches the unsharded decode step."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from repro.configs import get_config
+from repro.models import init_params, init_caches, make_decode_step
+from repro.launch.mesh import make_host_mesh
+from repro.distribution.context import activation_sharding
+from repro.distribution.sharding import cache_shardings, param_shardings
+
+# reduced arch with kh=1 so the 2-way TP axis cannot head-shard the cache
+cfg = replace(get_config('qwen2.5-3b').reduced(), num_kv_heads=1)
+params = init_params(jax.random.PRNGKey(0), cfg)
+caches = init_caches(cfg, batch=2, cache_len=8, dtype=jnp.float32)
+dec = make_decode_step(cfg, compute_dtype=jnp.float32)
+tok = jnp.ones((2,1), jnp.int32)
+idx = jnp.array(3, jnp.int32)
+ref_logits, _ = jax.jit(dec)(params, tok, caches, idx)
+
+mesh = make_host_mesh(2, 2)
+psh = param_shardings(jax.eval_shape(lambda: params), cfg, mesh, mode='serve')
+csh = cache_shardings(jax.eval_shape(lambda: caches), cfg, mesh, 2)
+params_s = jax.tree.map(lambda a, s: jax.device_put(a, s), params, psh)
+caches_s = jax.tree.map(lambda a, s: jax.device_put(a, s), caches, csh)
+with activation_sharding(mesh, ('data',)):
+    logits, _ = jax.jit(dec)(params_s, tok, caches_s, idx)
+err = float(jnp.abs(logits - ref_logits).max())
+assert err < 1e-3, err
+print('SHARDED_DECODE_OK', err)
+""",
+        n_devices=4,
+    )
+    assert "SHARDED_DECODE_OK" in out
+
+
+def test_dryrun_builder_on_host_mesh(subproc):
+    """The dry-run lowering machinery itself (shardings, specs, steps)
+    compiles on a small host mesh with a reduced config."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config, get_shape
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import input_specs
+from repro.distribution.context import activation_sharding
+from repro.distribution.sharding import batch_axes, param_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_params, make_train_step
+from repro.optim import adamw
+
+cfg = get_config('qwen3-moe-30b-a3b').reduced()
+shape = ShapeConfig('tiny_train', 64, 8, 'train')
+mesh = make_host_mesh(2, 2)
+params_shape = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+psh = param_shardings(params_shape, cfg, mesh)
+opt = adamw(1e-4)
+opt_shape = jax.eval_shape(opt.init, params_shape)
+osh = param_shardings(opt_shape, cfg, mesh)
+specs = input_specs(cfg, shape)
+bsh = {k: NamedSharding(mesh, P(batch_axes(mesh, shape.global_batch),
+                                *([None]*(len(v.shape)-1)))) for k, v in specs.items()}
+step = make_train_step(cfg, opt)
+jitted = jax.jit(step, in_shardings=(psh, osh, bsh), out_shardings=(psh, osh, None))
+with activation_sharding(mesh, batch_axes(mesh, shape.global_batch)):
+    lowered = jitted.lower(params_shape, opt_shape, specs)
+compiled = lowered.compile()
+assert compiled.memory_analysis().temp_size_in_bytes >= 0
+assert (compiled.cost_analysis() or {}).get('flops', 0) > 0
+print('DRYRUN_BUILD_OK')
+""",
+        n_devices=4,
+    )
+    assert "DRYRUN_BUILD_OK" in out

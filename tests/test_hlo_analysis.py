@@ -1,0 +1,66 @@
+"""HLO collective parser + roofline unit tests."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (
+    CollectiveStats,
+    parse_collectives,
+    roofline_from,
+    split_computations,
+    loop_multipliers,
+)
+
+HLO = """HloModule test, num_partitions=4
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ag = f32[8,8]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,2]<=[4], dimensions={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ag)
+}
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %ar = f32[4,4]{1,0} all-reduce(%a), replica_groups=[1,4]<=[4], to_apply=%add
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_split_computations():
+    comps = split_computations(HLO)
+    assert set(comps) == {"body.1", "cond.1", "main"}
+
+
+def test_flat_parse():
+    st = parse_collectives(HLO)
+    # all-gather result 8*8*4 = 256 B, group size 2 -> wire 128
+    assert st.result_bytes["all-gather"] == 256
+    assert st.wire_bytes["all-gather"] == 128.0
+    # all-reduce result 4*4*4 = 64 B, group 4 -> 2*(3/4)*64 = 96
+    assert st.wire_bytes["all-reduce"] == 96.0
+
+
+def test_loop_aware_parse():
+    st = parse_collectives(HLO, loop_aware=True)
+    assert st.counts["all-gather"] == 5  # trip count from backend_config
+    assert st.wire_bytes["all-gather"] == 5 * 128.0
+    assert st.counts["all-reduce"] == 1
+
+
+def test_loop_multipliers_trip_fallback():
+    hlo = HLO.replace(', backend_config={"known_trip_count":{"n":"5"}}', "")
+    st = parse_collectives(hlo, loop_aware=True)
+    assert st.counts["all-gather"] == 5  # constant(5) in the condition
+
+
+def test_roofline_dominant():
+    coll = CollectiveStats(
+        result_bytes={"all-reduce": 10}, wire_bytes={"all-reduce": 1e9}, counts={}
+    )
+    r = roofline_from({"flops": 1e12, "bytes accessed": 1e9}, coll, 5e11)
+    assert r.dominant == "collective"
+    assert abs(r.compute_s - 1e12 / 197e12) < 1e-9
+    assert r.useful_ratio == 0.5

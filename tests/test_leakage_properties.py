@@ -1,0 +1,166 @@
+"""Property-based tests (hypothesis) for the paper's analytical results:
+Theorem 1 monotonicity, capture probability bounds, Corollary 1/2 optimality
+vs grid search, and Monte-Carlo agreement with the closed form."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import NetworkConfig, data_rate, tx_time
+from repro.core.leakage import (
+    capture_probability,
+    expected_leakage,
+    optimal_powers_single_decoy,
+    optimal_powers_single_eave,
+    sample_leakage,
+)
+
+NET = NetworkConfig()
+
+pos = st.floats(min_value=10.0, max_value=800.0)
+pw = st.floats(min_value=0.01, max_value=2.0)
+
+
+@given(p_tx=pw, d1=pos, d2=pos, pd=pw, dd=pos)
+@settings(max_examples=50, deadline=None)
+def test_capture_probability_in_unit_interval(p_tx, d1, d2, pd, dd):
+    cap = capture_probability(
+        jnp.asarray(p_tx),
+        jnp.asarray([d1, d2]),
+        jnp.asarray([pd, 0.0]),
+        jnp.asarray([[dd, dd], [dd, dd]]),
+    )
+    c = np.asarray(cap)
+    assert np.all(c >= 0) and np.all(c <= 1)
+
+
+@given(p_lo=pw, p_hi=pw, d=pos, pd=pw, dd=pos)
+@settings(max_examples=50, deadline=None)
+def test_leakage_monotone_in_trainer_power(p_lo, p_hi, d, pd, dd):
+    """Theorem 1: E[I] increases with p_s (more capture probability)."""
+    lo, hi = sorted([p_lo, p_hi])
+    args = (
+        jnp.asarray([d]),
+        jnp.asarray([pd]),
+        jnp.asarray([[dd]]),
+        jnp.asarray([0.8]),
+        jnp.asarray(1.0),
+    )
+    l_lo = float(expected_leakage(jnp.asarray(lo), *args))
+    l_hi = float(expected_leakage(jnp.asarray(hi), *args))
+    assert l_hi >= l_lo - 1e-9
+
+
+@given(p=pw, d=pos, pd_lo=pw, pd_hi=pw, dd=pos)
+@settings(max_examples=50, deadline=None)
+def test_leakage_monotone_decreasing_in_decoy_power(p, d, pd_lo, pd_hi, dd):
+    """Theorem 1: E[I] decreases as decoy power grows."""
+    lo, hi = sorted([pd_lo, pd_hi])
+    def leak(pd):
+        return float(
+            expected_leakage(
+                jnp.asarray(p),
+                jnp.asarray([d]),
+                jnp.asarray([pd]),
+                jnp.asarray([[dd]]),
+                jnp.asarray([0.8]),
+                jnp.asarray(1.0),
+            )
+        )
+    assert leak(hi) <= leak(lo) + 1e-9
+
+
+def test_zero_power_edge_cases():
+    """p_s = 0 -> no leakage; huge decoy power -> leakage -> 0 (paper §IV)."""
+    dist_e = jnp.asarray([100.0])
+    dd = jnp.asarray([[120.0]])
+    q = jnp.asarray([0.8])
+    l0 = float(expected_leakage(jnp.asarray(0.0), dist_e, jnp.asarray([0.5]), dd, q, jnp.asarray(1.0)))
+    assert l0 == pytest.approx(0.0, abs=1e-6)
+    lbig = float(
+        expected_leakage(jnp.asarray(0.5), dist_e, jnp.asarray([1e9]), dd, q, jnp.asarray(1.0))
+    )
+    assert lbig < 1e-5
+
+
+def test_monte_carlo_matches_theorem1():
+    """Sampled capture frequency ~= closed-form capture probability."""
+    p_tx = jnp.asarray(0.5)
+    dist_e = jnp.asarray([150.0])
+    decoy_p = jnp.asarray([0.3, 0.0])
+    dd = jnp.asarray([[200.0], [999.0]])
+    q = jnp.asarray([1.0])
+    delta = jnp.asarray(1.0)
+    want = float(capture_probability(p_tx, dist_e, decoy_p, dd)[0])
+    keys = jax.random.split(jax.random.PRNGKey(0), 3000)
+    draws = jax.vmap(
+        lambda k: sample_leakage(k, p_tx, dist_e, decoy_p, dd, q, delta)
+    )(keys)
+    got = float(jnp.mean(draws))
+    assert abs(got - want) < 0.04, (got, want)
+
+
+def _cor1_setting():
+    bits = jnp.asarray(2e6)
+    d_tx_rx = jnp.asarray(150.0)
+    d_tx_d = jnp.asarray(200.0)
+    b_t = jnp.asarray(1.5)
+    b_e = jnp.asarray(3.0)
+    return bits, d_tx_rx, d_tx_d, b_t, b_e
+
+
+def test_corollary1_satisfies_constraints():
+    bits, d_tx_rx, d_tx_d, b_t, b_e = _cor1_setting()
+    p_s, p_d = optimal_powers_single_decoy(bits, d_tx_rx, d_tx_d, b_t, b_e, NET)
+    assert float(p_s) > 0 and float(p_d) > 0
+    # energy tight: (p_s + p_d) * B_T == B_E
+    assert float((p_s + p_d) * b_t) == pytest.approx(float(b_e), rel=1e-5)
+    # rate constraint met: transmission of `bits` finishes within B_T
+    rate = data_rate(p_s, d_tx_rx, jnp.asarray([p_d]), jnp.asarray([d_tx_d]), NET)
+    assert float(tx_time(bits, rate)) <= float(b_t) * (1 + 1e-4)
+
+
+def test_corollary1_beats_grid_search():
+    """No feasible (p_s, p_d) grid point leaks less than the closed form."""
+    bits, d_tx_rx, d_tx_d, b_t, b_e = _cor1_setting()
+    p_s, p_d = optimal_powers_single_decoy(bits, d_tx_rx, d_tx_d, b_t, b_e, NET)
+    dist_e = jnp.asarray([220.0])
+    dd_e = jnp.asarray([[90.0]])
+    q = jnp.asarray([0.8])
+
+    def leak(ps, pd):
+        return float(
+            expected_leakage(jnp.asarray(ps), dist_e, jnp.asarray([pd]), dd_e, q,
+                             jnp.asarray(1.0))
+        )
+
+    best = leak(float(p_s), float(p_d))
+    grid = np.linspace(0.01, float(b_e / b_t), 40)
+    for ps in grid:
+        for pd in grid:
+            if (ps + pd) * float(b_t) > float(b_e) + 1e-9:
+                continue
+            rate = data_rate(
+                jnp.asarray(ps), d_tx_rx, jnp.asarray([pd]), jnp.asarray([d_tx_d]), NET
+            )
+            if float(tx_time(bits, rate)) > float(b_t):
+                continue
+            assert leak(ps, pd) >= best - 5e-3, (ps, pd)
+
+
+def test_corollary2_structure():
+    """|E|=1: p_s depends only on the rate constraint; decoys water-level."""
+    bits = jnp.asarray(2e6)
+    d_tx_rx = jnp.asarray(150.0)
+    b_t, b_e = jnp.asarray(1.5), jnp.asarray(3.0)
+    dd_e = jnp.asarray([100.0, 300.0])
+    p_s, p_d = optimal_powers_single_eave(bits, d_tx_rx, dd_e, b_t, b_e, NET)
+    # rate exactly satisfied ignoring decoy interference
+    rate = data_rate(p_s, d_tx_rx, jnp.zeros(1), jnp.ones(1), NET)
+    assert float(tx_time(bits, rate)) == pytest.approx(float(b_t), rel=1e-4)
+    # energy tight
+    assert float(p_s + p_d.sum()) == pytest.approx(float(b_e / b_t), rel=1e-5)
+    # equalized received decoy power at the eavesdropper: p_d * d^-2 equal
+    recv = np.asarray(p_d) / np.asarray(dd_e) ** 2
+    assert recv[0] == pytest.approx(recv[1], rel=1e-4)

@@ -1,0 +1,146 @@
+"""Split-plan helpers, optimizer, checkpoint, data pipeline tests."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core.profiles import resnet101_profile, transformer_profile
+from repro.core.splitting import (
+    SplitPlan,
+    boundary_bits,
+    enumerate_boundaries,
+    even_boundaries,
+    plan_cost,
+    stage_sums,
+)
+from repro.core.channel import NetworkConfig
+from repro.data import input_specs, synthetic_batch
+from repro.optim import adamw, clip_by_global_norm, linear_warmup_cosine, sgd_momentum
+from repro.optim.optimizers import apply_updates, global_norm
+
+
+@given(L=st.integers(4, 12), s=st.integers(2, 4))
+@settings(max_examples=20, deadline=None)
+def test_enumerate_boundaries_count(L, s):
+    plans = list(enumerate_boundaries(L, s))
+    assert len(plans) == math.comb(L - 1, s - 1)
+    for p in plans:
+        assert p[-1] == L
+        assert all(b2 > b1 for b1, b2 in zip(p, p[1:]))
+
+
+@given(s=st.integers(2, 6))
+@settings(max_examples=10, deadline=None)
+def test_stage_sums_conservation(s):
+    prof = resnet101_profile(batch=1)
+    b = even_boundaries(prof.num_layers, s)
+    for field in ("param_bytes", "fwd_flops", "bwd_flops"):
+        total = stage_sums(prof, b, field).sum()
+        assert total == pytest.approx(getattr(prof, field).sum(), rel=1e-9)
+
+
+def test_plan_cost_monotone_in_bits():
+    prof = resnet101_profile(batch=1)
+    net = NetworkConfig()
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 800, (net.num_devices + 1, 2))
+    plan = SplitPlan(boundaries=even_boundaries(prof.num_layers, 4), devices=(0, 1, 2, 6))
+    p_tx = np.full(3, 0.5)
+    decoy = np.zeros((3, net.num_devices + 1))
+    t1, e1 = plan_cost(prof, plan, pos, p_tx, decoy, net)
+    # doubling all activation bytes doubles hop times
+    import dataclasses
+
+    prof2 = dataclasses.replace(
+        prof, act_bytes=prof.act_bytes * 2, grad_bytes=prof.grad_bytes * 2
+    )
+    t2, e2 = plan_cost(prof2, plan, pos, p_tx, decoy, net)
+    assert t2 > t1 and e2 > e1
+
+
+def test_adamw_optimizes_quadratic():
+    opt = adamw(0.1)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        ups, state = opt.update(grads, state, params)
+        params = apply_updates(params, ups)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_sgd_momentum_optimizes():
+    opt = sgd_momentum(0.05)
+    params = {"x": jnp.array([2.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        ups, state = opt.update(grads, state, params)
+        params = apply_updates(params, ups)
+    assert abs(float(params["x"][0])) < 1e-2
+
+
+@given(scale=st.floats(0.1, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm(scale):
+    tree = {"a": jnp.ones((3,)) * scale, "b": jnp.ones((2, 2)) * scale}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+
+
+def test_lr_schedule():
+    lr = linear_warmup_cosine(1e-3, warmup=10, total_steps=110)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(110)) < float(lr(50))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_pytree, save_pytree
+
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nest": {"b": jnp.ones((4,), jnp.bfloat16)},
+        "t": (jnp.zeros((2,)), jnp.array(3, jnp.int32)),
+    }
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(tree, path)
+    loaded = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    # shape mismatch is rejected
+    bad = dict(tree)
+    bad["a"] = jnp.zeros((3, 3))
+    with pytest.raises(ValueError):
+        load_pytree(path, bad)
+
+
+def test_synthetic_batch_deterministic():
+    cfg = get_config("qwen2.5-3b").reduced()
+    b1 = synthetic_batch(cfg, 2, 16, seed=7)
+    b2 = synthetic_batch(cfg, 2, 16, seed=7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    # labels are next-token shifted
+    assert b1["tokens"].shape == b1["labels"].shape
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for shape in INPUT_SHAPES:
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        if shape.kind == "decode":
+            assert specs["tokens"].shape == (shape.global_batch, 1)
+        else:
+            total = specs["tokens"].shape[1] + (
+                cfg.frontend_tokens if cfg.frontend != "none" else 0
+            )
+            assert total == shape.seq_len
+        if cfg.frontend != "none" and shape.kind != "decode":
+            assert "frontend" in specs

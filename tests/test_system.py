@@ -1,0 +1,107 @@
+"""End-to-end behaviour tests: the RL agent produces a valid split plan for
+a real architecture, and that plan executes as an actual pipelined training
+step whose loss matches single-device execution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.agents.loops import train_sac
+from repro.core.agents.sac import SACConfig
+from repro.core.env import MHSLEnv
+from repro.core.profiles import resnet101_profile, transformer_profile
+
+
+def _rollout_plan(env, params, cfg, seed=123):
+    """Greedy rollout of a trained policy -> (boundaries, devices)."""
+    from repro.core.agents import action_space as A
+    from repro.core.agents import sac as SAC
+
+    key = jax.random.PRNGKey(seed)
+    st = env.reset(jax.random.PRNGKey(0))
+    pair_dim = env.obs_dim + A.flat_dim(env.action_dims)
+    hist = jnp.zeros((cfg.hist_len, pair_dim))
+    hmask = jnp.zeros((cfg.hist_len,))
+    for t in range(env.episode_len):
+        key, ka, ks = jax.random.split(key, 3)
+        obs = env.observe(st)
+        masks = env.action_masks(st)
+        a = SAC.select_action(params, ka, obs, hist, hmask, masks, env.action_dims, cfg)
+        pair = jnp.concatenate([obs, A.onehot(a, env.action_dims)])
+        hist = jnp.roll(hist, -1, axis=0).at[-1].set(pair)
+        hmask = jnp.roll(hmask, -1).at[-1].set(1.0)
+        st, r, done, info = env.step(st, a, ks)
+    return tuple(int(b) for b in np.asarray(st.boundaries)), tuple(
+        int(d) for d in np.asarray(st.stage_dev)
+    )
+
+
+def test_rl_agent_emits_valid_plan_for_transformer():
+    cfg_model = get_config("qwen2.5-3b")
+    prof = transformer_profile(cfg_model, batch=1, seq=128)
+    env = MHSLEnv(profile=prof)
+    cfg = SACConfig(hidden=32, feat_dim=8, attn_dim=8, batch=32, buffer_size=2000)
+    res = train_sac(env, cfg, episodes=12, warmup_episodes=4)
+    boundaries, devices = _rollout_plan(env, res.params, cfg)
+    assert boundaries[-1] == cfg_model.num_layers
+    assert all(b2 > b1 for b1, b2 in zip(boundaries, boundaries[1:]))
+    assert devices[-1] == env.U  # server holds the head
+    assert len(set(devices)) == env.S
+
+
+def test_training_improves_over_random():
+    """After training, ICM-CA SAC beats the random-policy return on the
+    fixed geometry (coarse check - full curves live in benchmarks)."""
+    env = MHSLEnv(profile=resnet101_profile(batch=1))
+    cfg = SACConfig(hidden=64, feat_dim=16, attn_dim=16, batch=64, buffer_size=5000)
+    res = train_sac(env, cfg, episodes=60, warmup_episodes=8)
+    first = np.mean(res.episode_reward[:8])  # random warmup episodes
+    last = np.mean(res.episode_reward[-10:])
+    assert last > first, (first, last)
+
+
+def test_rl_plan_executes_as_pipeline(subproc):
+    """The full loop: env plan -> pipeline execution on multiple devices."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from repro.configs import get_config
+from repro.models import init_params, loss_fn
+from repro.core.pipeline import pipeline_loss_fn, make_stage_mesh
+from repro.core.env import MHSLEnv
+from repro.core.profiles import transformer_profile
+from repro.core.channel import NetworkConfig
+
+# a 6-layer reduced model split into S=3 stages by an env rollout
+cfg = replace(get_config('stablelm-1.6b').reduced(), num_layers=6)
+prof = transformer_profile(cfg, batch=1, seq=64)
+net = NetworkConfig(max_split=3)
+env = MHSLEnv(profile=prof, net=net)
+key = jax.random.PRNGKey(0)
+st = env.reset(key)
+for t in range(env.episode_len):
+    key, ka, ks = jax.random.split(key, 3)
+    masks = env.action_masks(st)
+    a = {'u': jnp.argmax(masks['u']), 'size': jnp.argmax(masks['size']),
+         'decoys': jnp.zeros(env.U, jnp.int32), 'p_tx': jnp.array(2), 'p_d': jnp.array(0)}
+    st, *_ = env.step(st, a, ks)
+boundaries = tuple(int(b) for b in np.asarray(st.boundaries))
+assert boundaries[-1] == 6
+
+params = init_params(jax.random.PRNGKey(0), cfg)
+mesh = make_stage_mesh(3)
+rng = np.random.default_rng(0)
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+pl = pipeline_loss_fn(cfg, mesh, boundaries=boundaries, n_microbatches=2)
+loss_pipe = float(jax.jit(pl)(params, tokens, labels))
+ref = float(loss_fn(params, {'tokens': tokens, 'labels': labels}, cfg, remat=False)[0])
+assert abs(loss_pipe - ref) < 5e-3, (loss_pipe, ref, boundaries)
+print('E2E_OK', boundaries)
+""",
+        n_devices=3,
+        timeout=420,
+    )
+    assert "E2E_OK" in out
