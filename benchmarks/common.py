@@ -14,6 +14,12 @@ OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 @dataclass(frozen=True)
 class BenchConfig:
     quick: bool = True
+    # vmapped env population per training chunk (rollout engine). 1 keeps
+    # the seed's episode ordering and updates-per-env-step ratio (updates
+    # are batched at chunk end either way - see train_sac's docstring);
+    # raise it, e.g. BenchConfig(num_envs=8), to trade per-episode update
+    # freshness for wall-clock. Metrics stay per-episode regardless.
+    num_envs: int = 1
 
     @property
     def episodes(self) -> int:

@@ -27,7 +27,8 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
         cfg = SACConfig(**flags)
         with Timer() as t:
             res = train_sac(env, cfg, episodes=bench.episodes,
-                            warmup_episodes=bench.warmup, seed=seed)
+                            warmup_episodes=bench.warmup, seed=seed,
+                            num_envs=bench.num_envs)
         curves[name] = {
             "reward": res.episode_reward,
             "leak": res.episode_leak,

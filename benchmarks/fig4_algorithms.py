@@ -21,16 +21,19 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     curves = {}
     with Timer() as t:
         res = train_sac(env, SACConfig(), episodes=bench.episodes,
-                        warmup_episodes=bench.warmup, seed=seed)
+                        warmup_episodes=bench.warmup, seed=seed,
+                        num_envs=bench.num_envs)
     curves["icm_ca"] = {"reward": res.episode_reward, "leak": res.episode_leak,
                         "states": res.states_explored, "seconds": t.seconds}
     with Timer() as t:
-        res = train_ppo(env, PPOConfig(), episodes=bench.episodes, seed=seed)
+        res = train_ppo(env, PPOConfig(), episodes=bench.episodes, seed=seed,
+                        num_envs=bench.num_envs)
     curves["ppo"] = {"reward": res.episode_reward, "leak": res.episode_leak,
                      "states": res.states_explored, "seconds": t.seconds}
     with Timer() as t:
         res = train_dqn(env, DQNConfig(eps_decay_episodes=bench.episodes // 2),
-                        episodes=bench.episodes, seed=seed)
+                        episodes=bench.episodes, seed=seed,
+                        num_envs=bench.num_envs)
     curves["dqn"] = {"reward": res.episode_reward, "leak": res.episode_leak,
                      "states": res.states_explored, "seconds": t.seconds}
 

@@ -51,11 +51,14 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     agents = {}
     cfg_full = SACConfig()
     agents["icm_ca"] = (train_sac(env, cfg_full, episodes=bench.episodes,
-                                  warmup_episodes=bench.warmup, seed=seed).params, cfg_full)
+                                  warmup_episodes=bench.warmup, seed=seed,
+                                  num_envs=bench.num_envs).params, cfg_full)
     cfg_plain = SACConfig(use_icm=False, use_ca=False)
     agents["sac"] = (train_sac(env, cfg_plain, episodes=bench.episodes,
-                               warmup_episodes=bench.warmup, seed=seed).params, cfg_plain)
-    ppo_params = train_ppo(env, PPOConfig(), episodes=bench.episodes, seed=seed).params
+                               warmup_episodes=bench.warmup, seed=seed,
+                               num_envs=bench.num_envs).params, cfg_plain)
+    ppo_params = train_ppo(env, PPOConfig(), episodes=bench.episodes, seed=seed,
+                           num_envs=bench.num_envs).params
 
     rows = {}
     for q in QS:

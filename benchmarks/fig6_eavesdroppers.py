@@ -29,12 +29,15 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
         env = MHSLEnv(profile=prof, net=replace(NetworkConfig(), num_eaves=e))
         row = {}
         cfg = SACConfig()
-        res = train_sac(env, cfg, episodes=episodes, warmup_episodes=bench.warmup, seed=seed)
+        res = train_sac(env, cfg, episodes=episodes, warmup_episodes=bench.warmup,
+                        seed=seed, num_envs=bench.num_envs)
         row["icm_ca"] = float(np.mean(res.episode_leak[-10:]))
         cfg_p = SACConfig(use_icm=False, use_ca=False)
-        res = train_sac(env, cfg_p, episodes=episodes, warmup_episodes=bench.warmup, seed=seed)
+        res = train_sac(env, cfg_p, episodes=episodes, warmup_episodes=bench.warmup,
+                        seed=seed, num_envs=bench.num_envs)
         row["sac"] = float(np.mean(res.episode_leak[-10:]))
-        res = train_ppo(env, PPOConfig(), episodes=episodes, seed=seed)
+        res = train_ppo(env, PPOConfig(), episodes=episodes, seed=seed,
+                        num_envs=bench.num_envs)
         row["ppo"] = float(np.mean(res.episode_leak[-10:]))
         rows[e] = row
         emit_csv_row(f"fig6/E={e}", 0.0, " ".join(f"{k}={v:.3f}" for k, v in row.items()))

@@ -16,9 +16,11 @@ from repro.core.profiles import resnet101_profile
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
     res_full = train_sac(env, SACConfig(), episodes=bench.episodes,
-                         warmup_episodes=bench.warmup, seed=seed)
+                         warmup_episodes=bench.warmup, seed=seed,
+                         num_envs=bench.num_envs)
     res_sac = train_sac(env, SACConfig(use_icm=False, use_ca=False),
-                        episodes=bench.episodes, warmup_episodes=bench.warmup, seed=seed)
+                        episodes=bench.episodes, warmup_episodes=bench.warmup,
+                        seed=seed, num_envs=bench.num_envs)
     at = min(bench.warmup + 20, len(res_full.states_explored) - 1)
     ratio = res_full.states_explored[at] / max(res_sac.states_explored[at], 1)
     derived = {

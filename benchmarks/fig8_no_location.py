@@ -18,10 +18,12 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     prof = resnet101_profile(batch=1)
     res_known = train_sac(MHSLEnv(profile=prof, know_eave_locations=True),
                           SACConfig(), episodes=bench.episodes,
-                          warmup_episodes=bench.warmup, seed=seed)
+                          warmup_episodes=bench.warmup, seed=seed,
+                          num_envs=bench.num_envs)
     res_blind = train_sac(MHSLEnv(profile=prof, know_eave_locations=False),
                           SACConfig(), episodes=bench.episodes,
-                          warmup_episodes=bench.warmup, seed=seed)
+                          warmup_episodes=bench.warmup, seed=seed,
+                          num_envs=bench.num_envs)
     known = float(np.mean(res_known.episode_reward[-10:]))
     blind = float(np.mean(res_blind.episode_reward[-10:]))
     derived = {

@@ -23,7 +23,7 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
     cfg = SACConfig()
     res = train_sac(env, cfg, episodes=bench.episodes, warmup_episodes=bench.warmup,
-                    seed=seed)
+                    seed=seed, num_envs=bench.num_envs)
     params = res.params
 
     key = jax.random.PRNGKey(99)

@@ -23,6 +23,7 @@ ALL = [
     "fig9_example",
     "table_power",
     "roofline",
+    "throughput",
 ]
 
 

@@ -1,0 +1,178 @@
+"""RL engine throughput: legacy per-step loop vs device-resident engine.
+
+Measures, with the SAME ``SACConfig`` on the current backend:
+
+* ``env_steps_per_sec`` - the seed's per-step host loop (one jit dispatch
+  per env call, host history window) vs the vmapped ``lax.scan`` rollout.
+* ``updates_per_sec`` - per-call jitted SAC updates fed by the host-numpy
+  replay buffer vs the fused update scan sampling the device buffer.
+
+Emits the scaffold CSV rows, saves each run's numbers to the bench OUT_DIR,
+and records the baseline in ``BENCH_throughput.json`` at the repo root so
+later PRs can track the performance trajectory. The baseline is
+write-once - an existing file is never clobbered by routine benchmark runs
+(set ``BENCH_THROUGHPUT_REFRESH=1`` to re-baseline deliberately).
+Acceptance for the engine PR: >=5x env-steps/sec.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchConfig, emit_csv_row, save_json
+from repro.core.agents import rollout as R
+from repro.core.agents import sac as SAC
+from repro.core.agents.buffer import ReplayBuffer
+from repro.core.agents.loops import _SAC_FIELDS, _sac_example
+from repro.core.env import MHSLEnv
+from repro.core.profiles import resnet101_profile
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_throughput.json")
+
+NUM_ENVS = 32  # engine population for the rollout measurement
+
+
+def _time_legacy_rollout(env, params, cfg, episodes: int, key) -> float:
+    """Seed dispatch pattern: per-step jitted calls. Returns steps/sec."""
+    legacy = R.make_legacy_episode(env, R.sac_policy(env.action_dims, cfg),
+                                   cfg.hist_len)
+    st0 = env.reset(jax.random.PRNGKey(0))
+    legacy(params, st0, key)  # warm the per-op jit caches
+    t0 = time.perf_counter()
+    for ep in range(episodes):
+        key, k = jax.random.split(key)
+        states, rewards = legacy(params, st0, k)
+    jax.block_until_ready(rewards[-1])
+    dt = time.perf_counter() - t0
+    return episodes * env.episode_len / dt
+
+
+def _time_engine_rollout(env, params, cfg, chunks: int, key) -> float:
+    """Vmapped scan rollout over NUM_ENVS envs. Returns steps/sec."""
+    rollout = R.make_batched_rollout(env, R.sac_policy(env.action_dims, cfg),
+                                     cfg.hist_len)
+    st0 = R.make_batched_reset(env)(
+        jnp.broadcast_to(jax.random.PRNGKey(0), (NUM_ENVS, 2))
+    )
+    akeys = jax.random.split(key, NUM_ENVS)
+    jax.block_until_ready(rollout(params, st0, akeys))  # compile
+    t0 = time.perf_counter()
+    for _ in range(chunks):
+        _, traj = rollout(params, st0, akeys)
+    jax.block_until_ready(traj["reward"])
+    dt = time.perf_counter() - t0
+    return chunks * NUM_ENVS * env.episode_len / dt
+
+
+def _fill_buffers(env, params, cfg):
+    """One uniform-policy chunk fills parallel host/device buffers."""
+    adims = env.action_dims
+    rollout = R.make_batched_rollout(env, R.uniform_policy(adims), cfg.hist_len)
+    n = 64
+    st0 = R.make_batched_reset(env)(
+        jnp.broadcast_to(jax.random.PRNGKey(0), (n, 2))
+    )
+    _, traj = rollout(params, st0, jax.random.split(jax.random.PRNGKey(1), n))
+    flat = R.flatten_transitions(traj, _SAC_FIELDS)
+
+    dev_buf = R.buffer_init(cfg.buffer_size, _sac_example(env, cfg))
+    dev_buf = R.buffer_add(dev_buf, flat)
+
+    host = jax.device_get(flat)
+    np_buf = ReplayBuffer(cfg.buffer_size,
+                          jax.tree.map(lambda x: x[0], host))
+    rows = n * env.episode_len
+    for i in range(rows):
+        np_buf.add(jax.tree.map(lambda x: x[i], host))
+    return np_buf, dev_buf
+
+
+def _time_legacy_updates(update, params, opt_state, np_buf, cfg,
+                         n_updates: int) -> float:
+    rng = np.random.default_rng(0)
+    batch = np_buf.sample(rng, cfg.batch)
+    params, opt_state, m = update(params, opt_state, batch)  # compile
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    for _ in range(n_updates):
+        batch = np_buf.sample(rng, cfg.batch)
+        params, opt_state, m = update(params, opt_state, batch)
+    jax.block_until_ready(m)
+    return n_updates / (time.perf_counter() - t0)
+
+
+def _time_engine_updates(update, params, opt_state, dev_buf, cfg,
+                         n_updates: int, repeats: int = 4) -> float:
+    fused = R.make_fused_update(update, cfg.batch, n_updates)
+    key = jax.random.PRNGKey(0)
+    out = fused(params, opt_state, dev_buf, key)  # compile
+    jax.block_until_ready(out[2])
+    t0 = time.perf_counter()
+    for i in range(repeats):
+        p, o, m = fused(params, opt_state, dev_buf,
+                        jax.random.fold_in(key, i))
+    jax.block_until_ready(m)
+    return repeats * n_updates / (time.perf_counter() - t0)
+
+
+def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
+    env = MHSLEnv(profile=resnet101_profile(batch=1))
+    cfg = SAC.SACConfig()
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    params = SAC.init_agent(k0, env.obs_dim, env.action_dims, cfg)
+    update, init_opt = SAC.make_update(env.action_dims, cfg)
+    opt_state = init_opt(params)
+
+    legacy_eps = 20 if bench.quick else 60
+    engine_chunks = 20 if bench.quick else 60
+    n_updates = 50 if bench.quick else 200
+
+    key, k1, k2 = jax.random.split(key, 3)
+    legacy_sps = _time_legacy_rollout(env, params, cfg, legacy_eps, k1)
+    engine_sps = _time_engine_rollout(env, params, cfg, engine_chunks, k2)
+    rollout_speedup = engine_sps / legacy_sps
+
+    np_buf, dev_buf = _fill_buffers(env, params, cfg)
+    legacy_ups = _time_legacy_updates(update, params, opt_state, np_buf, cfg,
+                                      n_updates)
+    engine_ups = _time_engine_updates(update, params, opt_state, dev_buf, cfg,
+                                      n_updates)
+    update_speedup = engine_ups / legacy_ups
+
+    emit_csv_row("throughput/legacy_env_steps_per_sec", 1e6 / legacy_sps,
+                 f"env_steps_per_sec={legacy_sps:.0f}")
+    emit_csv_row("throughput/engine_env_steps_per_sec", 1e6 / engine_sps,
+                 f"env_steps_per_sec={engine_sps:.0f} num_envs={NUM_ENVS}")
+    emit_csv_row("throughput/legacy_updates_per_sec", 1e6 / legacy_ups,
+                 f"updates_per_sec={legacy_ups:.0f}")
+    emit_csv_row("throughput/engine_updates_per_sec", 1e6 / engine_ups,
+                 f"updates_per_sec={engine_ups:.0f}")
+    emit_csv_row("throughput/summary", 0.0,
+                 f"rollout_speedup={rollout_speedup:.1f}x "
+                 f"update_speedup={update_speedup:.1f}x")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "num_envs": NUM_ENVS,
+        "env_steps_per_sec": {"legacy": legacy_sps, "engine": engine_sps},
+        "updates_per_sec": {"legacy": legacy_ups, "engine": engine_ups},
+        "rollout_speedup": rollout_speedup,
+        "update_speedup": update_speedup,
+    }
+    save_json("throughput", payload)
+    refresh = os.environ.get("BENCH_THROUGHPUT_REFRESH") == "1"
+    if refresh or not os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -66,6 +66,8 @@ def main():
     ap.add_argument("--episodes", type=int, default=60)
     ap.add_argument("--pipeline-steps", type=int, default=20)
     ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--num-envs", type=int, default=4,
+                    help="vmapped env population per rollout chunk")
     args = ap.parse_args()
 
     model_cfg_full = get_config(args.arch)
@@ -74,8 +76,10 @@ def main():
     env = MHSLEnv(profile=prof, net=NetworkConfig(max_split=args.stages))
     sac_cfg = SACConfig()
     print(f"[1/3] training ICM-CA SAC on {args.arch} profile "
-          f"({prof.num_layers} layers, {args.episodes} episodes)...")
-    res = train_sac(env, sac_cfg, episodes=args.episodes, warmup_episodes=10)
+          f"({prof.num_layers} layers, {args.episodes} episodes, "
+          f"{args.num_envs} vmapped envs)...")
+    res = train_sac(env, sac_cfg, episodes=args.episodes, warmup_episodes=10,
+                    num_envs=args.num_envs)
     print(f"      reward: first10={np.mean(res.episode_reward[:10]):.2f} "
           f"last10={np.mean(res.episode_reward[-10:]):.2f}")
 

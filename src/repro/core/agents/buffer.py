@@ -1,4 +1,9 @@
-"""Replay buffer (host numpy, circular) for the off-policy agents."""
+"""Replay buffer (host numpy, circular).
+
+The trainers now use the device-resident buffer in
+``repro.core.agents.rollout`` (``buffer_init``/``buffer_add``/
+``buffer_sample``); this host implementation is kept as the reference for
+the buffer-parity test and the throughput baseline."""
 from __future__ import annotations
 
 from typing import Dict

@@ -4,6 +4,12 @@ Q-learning needs a FLAT discrete action space; the factored MHSL action
 space is flattened over (u, size, p_tx, p_d) and the decoy subset is fixed
 to the heuristic "all eligible devices" (the paper itself notes Q-learning
 struggles as the space grows - this mirrors that constraint honestly).
+
+Training runs on the shared device-resident rollout engine
+(``repro.core.agents.rollout``): epsilon-greedy action selection happens on
+device inside the scanned rollout, transitions land in the device replay
+buffer, and each chunk's gradient steps (with periodic target-network
+syncs) run in one fused ``lax.scan``.
 """
 from __future__ import annotations
 
@@ -13,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agents.buffer import ReplayBuffer
+from repro.core.agents import rollout as R
 from repro.core.env import MHSLEnv, NBINS
 from repro.nn import init_mlp, mlp_apply
 from repro.optim import adamw
@@ -65,28 +71,54 @@ def flat_mask(env: MHSLEnv, masks):
     return m.reshape(-1)
 
 
-def train_dqn(env: MHSLEnv, cfg: DQNConfig, episodes: int = 200, seed: int = 0):
-    from repro.core.agents.loops import TrainResult, _obs_hash
+def _dqn_policy(env: MHSLEnv) -> R.Policy:
+    """Device-side epsilon-greedy over the flat masked action space.
 
-    key = jax.random.PRNGKey(seed)
-    rng = np.random.default_rng(seed)
-    n_actions = int(np.prod(flat_dims(env)))
-    key, k0 = jax.random.split(key)
-    params = init_mlp(k0, [env.obs_dim, cfg.hidden, cfg.hidden, n_actions])
-    target = jax.tree.map(jnp.copy, params)
-    opt = adamw(cfg.lr)
-    opt_state = opt.init(params)
+    ``params`` is a bundle ``{"q": q_net_params, "eps": scalar}`` so the
+    decayed epsilon flows through the jitted rollout as a traced value
+    (no recompile per episode)."""
 
-    env_step = jax.jit(env.step)
-    env_observe = jax.jit(env.observe)
-    env_masks = jax.jit(env.action_masks)
+    def policy(bundle, key, obs, hist, hist_mask, masks):
+        fm = flat_mask(env, masks)
+        q = mlp_apply(bundle["q"], obs)
+        k_explore, k_rand = jax.random.split(key)
+        rand_a = jax.random.categorical(k_rand, jnp.where(fm, 0.0, -1e9))
+        greedy_a = jnp.argmax(jnp.where(fm, q, -1e9))
+        explore = jax.random.uniform(k_explore) < bundle["eps"]
+        a_idx = jnp.where(explore, rand_a, greedy_a).astype(jnp.int32)
+        # fm is recorded so mask_next can be derived by shifting the
+        # trajectory instead of recomputing every mask a second time
+        return unflatten_action(a_idx, env, masks), {
+            "a": a_idx, "fm": fm.astype(jnp.float32)
+        }
 
-    @jax.jit
-    def q_values(params, obs):
-        return mlp_apply(params, obs)
+    return policy
 
-    @jax.jit
-    def update(params, target, opt_state, batch):
+
+_DQN_FIELDS = ("obs", "obs_next", "a", "mask_next", "reward", "done")
+
+
+def _dqn_example(env: MHSLEnv, n_actions: int):
+    return dict(
+        obs=jnp.zeros((env.obs_dim,), jnp.float32),
+        obs_next=jnp.zeros((env.obs_dim,), jnp.float32),
+        a=jnp.zeros((), jnp.int32),
+        mask_next=jnp.zeros((n_actions,), jnp.float32),
+        reward=jnp.zeros((), jnp.float32),
+        done=jnp.zeros((), jnp.float32),
+    )
+
+
+def _make_dqn_update(cfg: DQNConfig, opt):
+    """One Q-learning step in the engine's ``update_fn`` signature.
+
+    The "params" slot carries ``{"q", "target", "gs"}`` so the periodic
+    target sync and gradient-step counter thread through
+    ``rollout.make_fused_update``'s scan unchanged."""
+
+    def update_fn(bundle, opt_state, batch):
+        params, target = bundle["q"], bundle["target"]
+
         def loss_fn(params):
             q = mlp_apply(params, batch["obs"])
             qa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
@@ -97,61 +129,71 @@ def train_dqn(env: MHSLEnv, cfg: DQNConfig, episodes: int = 200, seed: int = 0):
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         ups, opt_state = opt.update(grads, opt_state, params)
-        return apply_updates(params, ups), opt_state, loss
+        params = apply_updates(params, ups)
+        gs = bundle["gs"] + 1
+        sync = (gs % cfg.target_update) == 0
+        target = jax.tree.map(lambda t, p: jnp.where(sync, p, t), target, params)
+        return {"q": params, "target": target, "gs": gs}, opt_state, loss
+
+    return update_fn
+
+
+def train_dqn(env: MHSLEnv, cfg: DQNConfig, episodes: int = 200, seed: int = 0,
+              num_envs: int = 1):
+    from repro.core.agents.loops import TrainResult, _chunk_metrics
+
+    if num_envs < 1:
+        raise ValueError(f"num_envs must be >= 1, got {num_envs}")
+    key = jax.random.PRNGKey(seed)
+    n_actions = int(np.prod(flat_dims(env)))
+    key, k0 = jax.random.split(key)
+    params = init_mlp(k0, [env.obs_dim, cfg.hidden, cfg.hidden, n_actions])
+    target = jax.tree.map(jnp.copy, params)
+    opt = adamw(cfg.lr)
+    opt_state = opt.init(params)
+
+    rollout = R.make_batched_rollout(env, _dqn_policy(env), hist_len=1)
+    # mask_next[t] = fm[t+1]; only the post-episode state needs a fresh mask
+    final_mask = jax.jit(jax.vmap(
+        lambda st: flat_mask(env, env.action_masks(st)).astype(jnp.float32)
+    ))
+    reset_batch = R.make_batched_reset(env)
+    buf = R.buffer_init(cfg.buffer_size, _dqn_example(env, n_actions))
+    # one gradient step per env step, as in the seed loop
+    n_updates = env.episode_len * num_envs
+    fused_update = R.make_fused_update(_make_dqn_update(cfg, opt), cfg.batch,
+                                       n_updates)
+    learner = {"q": params, "target": target, "gs": jnp.zeros((), jnp.int32)}
 
     result = TrainResult()
-    seen = set()
+    seen: set = set()
     key, reset_key = jax.random.split(key)
-    grad_steps = 0
-    buf = None
-    for ep in range(episodes):
-        st = env.reset(reset_key)
+
+    ep = 0
+    while ep < episodes:
         eps = max(
             cfg.eps_end,
             cfg.eps_start
             - (cfg.eps_start - cfg.eps_end) * ep / max(cfg.eps_decay_episodes, 1),
         )
-        ep_r = ep_leak = ep_viol = 0.0
-        for t in range(env.episode_len):
-            obs = env_observe(st)
-            masks = env_masks(st)
-            seen.add(_obs_hash(obs))
-            fm = flat_mask(env, masks)
-            key, ka, ks = jax.random.split(key, 3)
-            if rng.random() < eps:
-                valid = np.flatnonzero(np.asarray(fm))
-                a_idx = int(rng.choice(valid))
-            else:
-                q = q_values(params, obs)
-                a_idx = int(jnp.argmax(jnp.where(fm, q, -1e9)))
-            action = unflatten_action(jnp.asarray(a_idx), env, masks)
-            st2, r, done, info = env_step(st, action, ks)
-            obs2 = env_observe(st2)
-            fm2 = flat_mask(env, env_masks(st2))
-            item = dict(
-                obs=np.asarray(obs, np.float32),
-                obs_next=np.asarray(obs2, np.float32),
-                a=np.int32(a_idx),
-                mask_next=np.asarray(fm2, np.float32),
-                reward=np.float32(r),
-                done=np.float32(done),
-            )
-            if buf is None:
-                buf = ReplayBuffer(cfg.buffer_size, item)
-            buf.add(item)
-            ep_r += float(r)
-            ep_leak += float(info["leak"])
-            ep_viol += float((st2.e_r <= 0) | (st2.t_r <= 0))
-            st = st2
-            if buf.size >= cfg.batch:
-                batch = buf.sample(rng, cfg.batch)
-                params, opt_state, loss = update(params, target, opt_state, batch)
-                grad_steps += 1
-                if grad_steps % cfg.target_update == 0:
-                    target = jax.tree.map(jnp.copy, params)
-        result.episode_reward.append(ep_r)
-        result.episode_leak.append(ep_leak)
-        result.episode_violation.append(ep_viol)
-        result.states_explored.append(len(seen))
-    result.params = params  # type: ignore[attr-defined]
+        rkeys = R.episode_reset_keys(reset_key, num_envs, resample=False)
+        key, ksub = jax.random.split(key)
+        akeys = jax.random.split(ksub, num_envs)
+
+        st0 = reset_batch(rkeys)
+        bundle = {"q": learner["q"], "eps": jnp.asarray(eps, jnp.float32)}
+        st_final, traj = rollout(bundle, st0, akeys)
+        traj["mask_next"] = jnp.concatenate(
+            [traj["fm"][:, 1:], final_mask(st_final)[:, None]], axis=1
+        )
+
+        buf = R.buffer_add(buf, R.flatten_transitions(traj, _DQN_FIELDS))
+        _chunk_metrics(result, seen, traj, ep, episodes, num_envs)
+
+        if int(buf.size) >= cfg.batch:
+            key, ku = jax.random.split(key)
+            learner, opt_state, _ = fused_update(learner, opt_state, buf, ku)
+        ep += num_envs
+
+    result.params = learner["q"]  # type: ignore[attr-defined]
     return result

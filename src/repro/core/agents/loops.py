@@ -1,5 +1,13 @@
 """Training loops: episode rollout + off-policy updates (Algorithm 1).
 
+Built on the device-resident rollout engine (``repro.core.agents.rollout``):
+a vmapped population of ``num_envs`` environments is stepped under
+``lax.scan`` over the full episode, transitions land in a device replay
+buffer in one batched write, and all gradient updates for the chunk run in
+a single fused scan. The only per-chunk host traffic is one ``device_get``
+of the episode metrics + observations (the latter feeds the paper's
+distinct-states-explored counter, Fig. 7).
+
 Tracks the paper's figure metrics: accumulated reward per episode (Figs.
 3-4), information leaked (Figs. 5-6), and distinct states explored (Fig. 7,
 hash of the discretized observation).
@@ -7,15 +15,15 @@ hash of the discretized observation).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.agents import action_space as A
+from repro.core.agents import rollout as R
 from repro.core.agents import sac as SAC
-from repro.core.agents.buffer import ReplayBuffer
 from repro.core.env import MHSLEnv
 
 
@@ -40,6 +48,60 @@ class TrainResult:
     metrics: list = field(default_factory=list)
 
 
+# transition fields persisted to the SAC replay buffer
+_SAC_FIELDS = ("obs", "obs_next", "hist", "hist_mask", "action", "masks",
+               "reward", "done")
+
+
+def _sac_example(env: MHSLEnv, cfg: SAC.SACConfig) -> Dict:
+    """Single-transition pytree defining the replay buffer layout."""
+    adims = env.action_dims
+    pair_dim = env.obs_dim + A.flat_dim(adims)
+    return dict(
+        obs=jnp.zeros((env.obs_dim,), jnp.float32),
+        obs_next=jnp.zeros((env.obs_dim,), jnp.float32),
+        hist=jnp.zeros((cfg.hist_len, pair_dim), jnp.float32),
+        hist_mask=jnp.zeros((cfg.hist_len,), jnp.float32),
+        action={
+            "u": jnp.zeros((), jnp.int32),
+            "size": jnp.zeros((), jnp.int32),
+            "decoys": jnp.zeros((adims["decoys"],), jnp.int32),
+            "p_tx": jnp.zeros((), jnp.int32),
+            "p_d": jnp.zeros((), jnp.int32),
+        },
+        masks={
+            "u": jnp.zeros((adims["u"],), bool),
+            "size": jnp.zeros((adims["size"],), bool),
+            "decoys": jnp.zeros((adims["decoys"],), bool),
+            "p_tx": jnp.zeros((adims["p_tx"],), bool),
+            "p_d": jnp.zeros((adims["p_d"],), bool),
+        },
+        reward=jnp.zeros((), jnp.float32),
+        done=jnp.zeros((), jnp.float32),
+    )
+
+
+def _chunk_metrics(result: TrainResult, seen: set, traj, ep: int,
+                   episodes: int, num_envs: int) -> None:
+    """Single device->host transfer per chunk; then per-episode bookkeeping
+    (reward/leak/violation sums + the host-side distinct-state counter)."""
+    host = jax.device_get({
+        "obs": traj["obs"],
+        "reward": traj["reward"],
+        "leak": traj["leak"],
+        "viol": traj["viol"],
+    })
+    for i in range(num_envs):
+        if ep + i >= episodes:
+            break
+        for row in host["obs"][i]:
+            seen.add(_obs_hash(row))
+        result.episode_reward.append(float(host["reward"][i].sum()))
+        result.episode_leak.append(float(host["leak"][i].sum()))
+        result.episode_violation.append(float(host["viol"][i].sum()))
+        result.states_explored.append(len(seen))
+
+
 def train_sac(
     env: MHSLEnv,
     cfg: SAC.SACConfig,
@@ -47,116 +109,71 @@ def train_sac(
     seed: int = 0,
     warmup_episodes: int = 10,
     resample_positions: bool = False,
+    num_envs: int = 1,
 ) -> TrainResult:
+    """ICM-CA SAC training on the device-resident engine.
+
+    ``num_envs`` environments run as one vmapped population; each chunk
+    rolls out ``num_envs`` full episodes under a single jitted scan, then
+    runs ``num_envs * episode_len * updates_per_step`` gradient steps in a
+    fused update scan (the same updates-per-env-step ratio as the seed
+    per-step loop). Note the cadence difference vs the seed: updates are
+    batched at chunk end with the rollout policy frozen for the episode,
+    where the seed interleaved ``updates_per_step`` steps after every env
+    step - counts match, training dynamics are the standard batched-RL
+    approximation. With ``num_envs > 1`` the warmup boundary rounds UP to
+    chunk granularity: a chunk that straddles ``warmup_episodes`` still
+    rolls out uniformly and gradient updates start with the first chunk
+    that begins at or past the boundary. If ``episodes`` is not a multiple
+    of ``num_envs`` the final chunk still trains on the full population
+    but only the first ``episodes`` entries are reported.
+    """
+    if num_envs < 1:
+        raise ValueError(f"num_envs must be >= 1, got {num_envs}")
     key = jax.random.PRNGKey(seed)
-    rng = np.random.default_rng(seed)
     adims = env.action_dims
     key, k0 = jax.random.split(key)
     params = SAC.init_agent(k0, env.obs_dim, adims, cfg)
     update, init_opt = SAC.make_update(adims, cfg)
     opt_state = init_opt(params)
 
-    pair_dim = env.obs_dim + A.flat_dim(adims)
-    hist0 = np.zeros((cfg.hist_len, pair_dim), np.float32)
-
-    # example transition for buffer allocation
-    key, kr = jax.random.split(key)
-    st = env.reset(kr)
-    obs0 = np.asarray(env.observe(st), np.float32)
-    masks0 = {k: np.asarray(v) for k, v in env.action_masks(st).items()}
-    example = dict(
-        obs=obs0,
-        obs_next=obs0,
-        hist=hist0,
-        hist_mask=np.zeros((cfg.hist_len,), np.float32),
-        action={
-            "u": np.int32(0),
-            "size": np.int32(0),
-            "decoys": np.zeros((adims["decoys"],), np.int32),
-            "p_tx": np.int32(0),
-            "p_d": np.int32(0),
-        },
-        masks=masks0,
-        reward=np.float32(0),
-        done=np.float32(0),
+    buf = R.buffer_init(cfg.buffer_size, _sac_example(env, cfg))
+    reset_batch = R.make_batched_reset(env)
+    rollout_uniform = R.make_batched_rollout(
+        env, R.uniform_policy(adims), cfg.hist_len
     )
-    buf = ReplayBuffer(cfg.buffer_size, example)
-
-    env_step = jax.jit(env.step)
-    env_observe = jax.jit(env.observe)
-    env_masks = jax.jit(env.action_masks)
+    rollout_actor = R.make_batched_rollout(
+        env, R.sac_policy(adims, cfg), cfg.hist_len
+    )
+    n_updates = cfg.updates_per_step * env.episode_len * num_envs
+    fused_update = R.make_fused_update(update, cfg.batch, n_updates)
 
     result = TrainResult()
-    seen = set()
+    seen: set = set()
     key, kpos = jax.random.split(key)
     reset_key = kpos
 
-    for ep in range(episodes):
+    ep = 0
+    while ep < episodes:
         if resample_positions:
             key, reset_key = jax.random.split(key)
-        st = env.reset(reset_key)
-        hist = hist0.copy()
-        hist_mask = np.zeros((cfg.hist_len,), np.float32)
-        ep_r, ep_leak, ep_viol = 0.0, 0.0, 0.0
-        for t in range(env.episode_len):
-            obs = env_observe(st)
-            masks = env_masks(st)
-            seen.add(_obs_hash(obs))
-            key, ka, ks = jax.random.split(key, 3)
-            if ep < warmup_episodes:
-                logits = {
-                    "u": jnp.where(masks["u"], 0.0, -1e9),
-                    "size": jnp.where(masks["size"], 0.0, -1e9),
-                    "decoys": jnp.stack(
-                        [jnp.zeros(adims["decoys"]),
-                         jnp.where(masks["decoys"], 0.0, -1e9)], -1
-                    ),
-                    "p_tx": jnp.zeros(adims["p_tx"]),
-                    "p_d": jnp.zeros(adims["p_d"]),
-                }
-                action = A.sample(ka, logits)
-            else:
-                action = SAC.select_action(
-                    params, ka, obs, jnp.asarray(hist), jnp.asarray(hist_mask),
-                    masks, adims, cfg,
-                )
-            st2, r, done, info = env_step(st, action, ks)
-            obs2 = env_observe(st2)
-            buf.add(
-                dict(
-                    obs=np.asarray(obs, np.float32),
-                    obs_next=np.asarray(obs2, np.float32),
-                    hist=hist.copy(),
-                    hist_mask=hist_mask.copy(),
-                    action={k: np.asarray(v) for k, v in action.items()},
-                    masks={k: np.asarray(v) for k, v in masks.items()},
-                    reward=np.float32(r),
-                    done=np.float32(done),
-                )
-            )
-            # roll history (newest last)
-            pair = np.concatenate(
-                [np.asarray(obs, np.float32),
-                 np.asarray(A.onehot(action, adims), np.float32)]
-            )
-            hist = np.roll(hist, -1, axis=0)
-            hist[-1] = pair
-            hist_mask = np.roll(hist_mask, -1)
-            hist_mask[-1] = 1.0
-            ep_r += float(r)
-            ep_leak += float(info["leak"])
-            ep_viol += float((st2.e_r <= 0) | (st2.t_r <= 0))
-            st = st2
+        rkeys = R.episode_reset_keys(reset_key, num_envs, resample_positions)
+        key, ksub = jax.random.split(key)
+        akeys = jax.random.split(ksub, num_envs)
 
-            if ep >= warmup_episodes and buf.size >= cfg.batch:
-                for _ in range(cfg.updates_per_step):
-                    batch = buf.sample(rng, cfg.batch)
-                    params, opt_state, m = update(params, opt_state, batch)
+        st0 = reset_batch(rkeys)
+        rollout = rollout_uniform if ep < warmup_episodes else rollout_actor
+        _, traj = rollout(params, st0, akeys)
 
-        result.episode_reward.append(ep_r)
-        result.episode_leak.append(ep_leak)
-        result.episode_violation.append(ep_viol)
-        result.states_explored.append(len(seen))
+        buf = R.buffer_add(buf, R.flatten_transitions(traj, _SAC_FIELDS))
+        _chunk_metrics(result, seen, traj, ep, episodes, num_envs)
+
+        # warmup rounds UP to chunk granularity: no updates until the chunk
+        # that starts at/past the boundary (exact at num_envs=1)
+        if ep >= warmup_episodes and int(buf.size) >= cfg.batch:
+            key, ku = jax.random.split(key)
+            params, opt_state, _ = fused_update(params, opt_state, buf, ku)
+        ep += num_envs
 
     result.params = params  # type: ignore[attr-defined]
     return result
@@ -164,35 +181,16 @@ def train_sac(
 
 def evaluate_sac(env: MHSLEnv, params, cfg: SAC.SACConfig, episodes: int = 20,
                  seed: int = 1000) -> Dict[str, float]:
+    """Policy evaluation: all ``episodes`` run as one vmapped population
+    (fresh geometry per episode, matching the seed's evaluation draw)."""
     key = jax.random.PRNGKey(seed)
-    adims = env.action_dims
-    pair_dim = env.obs_dim + A.flat_dim(adims)
-    env_step = jax.jit(env.step)
-    env_observe = jax.jit(env.observe)
-    env_masks = jax.jit(env.action_masks)
-    tot_r, tot_leak = 0.0, 0.0
-    for ep in range(episodes):
-        key, kr = jax.random.split(key)
-        st = env.reset(kr)
-        hist = np.zeros((cfg.hist_len, pair_dim), np.float32)
-        hist_mask = np.zeros((cfg.hist_len,), np.float32)
-        for t in range(env.episode_len):
-            obs = env_observe(st)
-            masks = env_masks(st)
-            key, ka, ks = jax.random.split(key, 3)
-            action = SAC.select_action(
-                params, ka, obs, jnp.asarray(hist), jnp.asarray(hist_mask),
-                masks, adims, cfg,
-            )
-            st, r, done, info = env_step(st, action, ks)
-            pair = np.concatenate(
-                [np.asarray(obs, np.float32),
-                 np.asarray(A.onehot(action, adims), np.float32)]
-            )
-            hist = np.roll(hist, -1, axis=0)
-            hist[-1] = pair
-            hist_mask = np.roll(hist_mask, -1)
-            hist_mask[-1] = 1.0
-            tot_r += float(r)
-            tot_leak += float(info["leak"])
-    return {"reward": tot_r / episodes, "leak": tot_leak / episodes}
+    k_reset, k_act = jax.random.split(key)
+    rollout = R.make_batched_rollout(
+        env, R.sac_policy(env.action_dims, cfg), cfg.hist_len
+    )
+    st0 = R.make_batched_reset(env)(jax.random.split(k_reset, episodes))
+    _, traj = rollout(params, st0, jax.random.split(k_act, episodes))
+    return {
+        "reward": float(jnp.sum(traj["reward"])) / episodes,
+        "leak": float(jnp.sum(traj["leak"])) / episodes,
+    }

@@ -2,6 +2,12 @@
 
 Standard clipped-objective PPO over the same factored masked action space,
 actor on the raw state (no CA, no ICM), V critic with GAE.
+
+Rollouts run on the shared device-resident engine
+(``repro.core.agents.rollout``): each chunk of ``num_envs`` episodes is one
+vmapped ``lax.scan`` that also records per-step log-probs and values, GAE
+runs as a vmapped reverse scan on device, and the ``epochs`` policy updates
+over each collected batch run inside a single jitted scan.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.agents import action_space as A
+from repro.core.agents import rollout as R
 from repro.core.agents.icm import sum_head_dims
 from repro.core.agents.sac import _split_heads
 from repro.core.env import MHSLEnv
@@ -47,6 +54,19 @@ def ppo_logits(params, obs, masks, action_dims):
     return A.masked_logits(_split_heads(raw, action_dims), masks)
 
 
+def ppo_policy(action_dims: Dict[str, int]) -> R.Policy:
+    """Sampling policy that also records log-prob and value per step."""
+
+    def policy(params, key, obs, hist, hist_mask, masks):
+        logits = ppo_logits(params, obs, masks, action_dims)
+        action = A.sample(key, logits)
+        lp = A.log_prob(logits, action)
+        v = mlp_apply(params["critic"], obs)[..., 0]
+        return action, {"logp": lp, "v": v}
+
+    return policy
+
+
 def make_ppo_update(action_dims, cfg: PPOConfig):
     opt = adamw(cfg.lr)
 
@@ -73,9 +93,15 @@ def make_ppo_update(action_dims, cfg: PPOConfig):
     return update, opt.init
 
 
-def train_ppo(env: MHSLEnv, cfg: PPOConfig, episodes: int = 200, seed: int = 0):
-    from repro.core.agents.loops import TrainResult, _obs_hash
+_PPO_FIELDS = ("obs", "masks", "action", "logp", "adv", "ret")
 
+
+def train_ppo(env: MHSLEnv, cfg: PPOConfig, episodes: int = 200, seed: int = 0,
+              num_envs: int = 1):
+    from repro.core.agents.loops import TrainResult, _chunk_metrics
+
+    if num_envs < 1:
+        raise ValueError(f"num_envs must be >= 1, got {num_envs}")
     key = jax.random.PRNGKey(seed)
     adims = env.action_dims
     key, k0 = jax.random.split(key)
@@ -83,83 +109,45 @@ def train_ppo(env: MHSLEnv, cfg: PPOConfig, episodes: int = 200, seed: int = 0):
     update, opt_init = make_ppo_update(adims, cfg)
     opt_state = opt_init(params)
 
-    env_step = jax.jit(env.step)
-    env_observe = jax.jit(env.observe)
-    env_masks = jax.jit(env.action_masks)
-
-    @jax.jit
-    def act(params, key, obs, masks):
-        logits = ppo_logits(params, obs, masks, adims)
-        action = A.sample(key, logits)
-        lp = A.log_prob(logits, action)
-        v = mlp_apply(params["critic"], obs)[..., 0]
-        return action, lp, v
+    rollout = R.make_batched_rollout(env, ppo_policy(adims), hist_len=1)
+    reset_batch = R.make_batched_reset(env)
+    gae_batch = jax.jit(jax.vmap(
+        lambda r, v: R.gae(r, v, cfg.gamma, cfg.lam)
+    ))
+    run_epochs = R.make_scan_updates(update, cfg.epochs)
+    # normalize advantages over the whole collected batch (seed behaviour)
+    norm_adv = jax.jit(
+        lambda a: (a - a.mean()) / (a.std() + 1e-6)
+    )
 
     result = TrainResult()
-    seen = set()
+    seen: set = set()
     key, reset_key = jax.random.split(key)
-    traj = []
-    for ep in range(episodes):
-        st = env.reset(reset_key)
-        ep_r = ep_leak = ep_viol = 0.0
-        rows = []
-        for t in range(env.episode_len):
-            obs = env_observe(st)
-            masks = env_masks(st)
-            seen.add(_obs_hash(obs))
-            key, ka, ks = jax.random.split(key, 3)
-            action, lp, v = act(params, ka, obs, masks)
-            st2, r, done, info = env_step(st, action, ks)
-            rows.append(
-                dict(obs=np.asarray(obs), masks={k: np.asarray(m) for k, m in masks.items()},
-                     action={k: np.asarray(v_) for k, v_ in action.items()},
-                     logp_old=float(lp), v=float(v), r=float(r), done=float(done))
-            )
-            ep_r += float(r)
-            ep_leak += float(info["leak"])
-            ep_viol += float((st2.e_r <= 0) | (st2.t_r <= 0))
-            st = st2
-        # GAE for this episode
-        vs = np.array([row["v"] for row in rows] + [0.0])
-        rs = np.array([row["r"] for row in rows])
-        adv = np.zeros(len(rows))
-        g = 0.0
-        for t in reversed(range(len(rows))):
-            delta = rs[t] + cfg.gamma * vs[t + 1] - vs[t]
-            g = delta + cfg.gamma * cfg.lam * g
-            adv[t] = g
-        ret = adv + vs[:-1]
-        for row, a_, rt in zip(rows, adv, ret):
-            row["adv"] = a_
-            row["ret"] = rt
-        traj.extend(rows)
+    pending = []  # flattened chunk batches awaiting a policy update
+    pending_eps = 0
 
-        result.episode_reward.append(ep_r)
-        result.episode_leak.append(ep_leak)
-        result.episode_violation.append(ep_viol)
-        result.states_explored.append(len(seen))
+    ep = 0
+    while ep < episodes:
+        rkeys = R.episode_reset_keys(reset_key, num_envs, resample=False)
+        key, ksub = jax.random.split(key)
+        akeys = jax.random.split(ksub, num_envs)
 
-        if (ep + 1) % cfg.episodes_per_batch == 0:
-            batch = {
-                "obs": jnp.asarray(np.stack([r_["obs"] for r_ in traj])),
-                "masks": {
-                    k: jnp.asarray(np.stack([r_["masks"][k] for r_ in traj]))
-                    for k in traj[0]["masks"]
-                },
-                "action": {
-                    k: jnp.asarray(np.stack([r_["action"][k] for r_ in traj]))
-                    for k in traj[0]["action"]
-                },
-                "logp_old": jnp.asarray([r_["logp_old"] for r_ in traj]),
-                "adv": jnp.asarray(
-                    (np.array([r_["adv"] for r_ in traj]) - np.mean([r_["adv"] for r_ in traj]))
-                    / (np.std([r_["adv"] for r_ in traj]) + 1e-6)
-                ),
-                "ret": jnp.asarray([r_["ret"] for r_ in traj]),
-            }
-            for _ in range(cfg.epochs):
-                params, opt_state, m = update(params, opt_state, batch)
-            traj = []
+        st0 = reset_batch(rkeys)
+        _, traj = rollout(params, st0, akeys)
+        adv, ret = gae_batch(traj["reward"], traj["v"])
+        traj = dict(traj, adv=adv, ret=ret)
+
+        pending.append(R.flatten_transitions(traj, _PPO_FIELDS))
+        pending_eps += num_envs
+        _chunk_metrics(result, seen, traj, ep, episodes, num_envs)
+
+        if pending_eps >= cfg.episodes_per_batch:
+            batch = jax.tree.map(lambda *xs: jnp.concatenate(xs), *pending)
+            batch["logp_old"] = batch.pop("logp")
+            batch["adv"] = norm_adv(batch["adv"])
+            params, opt_state, _ = run_epochs(params, opt_state, batch)
+            pending, pending_eps = [], 0
+        ep += num_envs
 
     result.params = params  # type: ignore[attr-defined]
     return result

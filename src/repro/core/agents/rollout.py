@@ -1,0 +1,423 @@
+"""Device-resident vectorized rollout engine for the MHSL RL agents.
+
+The seed trainers (``train_sac``/``train_dqn``/``train_ppo``) were host-
+Python per-step loops: every env step paid separate jit dispatches for
+``env.step``/``observe``/``action_masks``, round-tripped ``np.asarray``
+host<->device copies, pushed transitions into a host-numpy replay buffer,
+and ran ``updates_per_step`` gradient updates in an inner Python loop.
+Reproducing the paper's convergence figures was bottlenecked on dispatch
+overhead, not compute.
+
+This module fuses the whole rollout-store-update cycle on device:
+
+* ``make_batched_rollout`` - a ``jax.vmap``-batched population of
+  ``MHSLEnv`` instances stepped under ``lax.scan`` over the full ``2S-1``
+  step episode. The scan carry holds the env state, the cross-attention
+  history window, and its validity mask; the stacked scan outputs are the
+  full transition batch (one device array per field, ``(num_envs, T, ...)``).
+* ``BufferState`` + ``buffer_init``/``buffer_add``/``buffer_sample`` - a
+  replay buffer held as a pytree of device arrays with jitted
+  ``.at[idx].set`` ring writes. ``buffer_add`` donates the buffer storage
+  (``jax.jit(..., donate_argnums=(0,))``) so accelerator backends update it
+  in place; donation is skipped on CPU where XLA does not implement it.
+* ``make_fused_update`` - ``n_updates`` gradient steps fused into a single
+  jitted ``lax.scan`` over pre-sampled batch indices, gathering minibatches
+  straight out of the device buffer.
+* ``make_scan_updates`` - the on-policy analogue: ``n`` epochs over one
+  fixed batch under ``lax.scan`` (PPO).
+* ``make_legacy_episode`` - the seed's per-step host loop, kept as the
+  reference implementation for the throughput baseline and the
+  rollout-equivalence test. Trainers do not use it.
+
+All policies share one signature so SAC / DQN / PPO plug into the same
+engine::
+
+    policy(params, key, obs, hist, hist_mask, masks) -> (action, extras)
+
+``extras`` is a dict of additional per-step fields recorded into the
+trajectory (e.g. PPO's ``logp``/``v``, DQN's flat action index).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agents import action_space as A
+from repro.core.env import EnvState, MHSLEnv
+
+Array = jax.Array
+Policy = Callable[..., Tuple[Dict[str, Array], Dict[str, Array]]]
+
+
+# ---------------------------------------------------------------------------
+# device replay buffer: pytree of (capacity, ...) arrays + ring pointer
+# ---------------------------------------------------------------------------
+
+
+class BufferState(NamedTuple):
+    """Replay storage as a pytree of device arrays (circular, fixed cap)."""
+
+    data: Any  # pytree; each leaf (capacity, ...)
+    ptr: Array  # int32 scalar, next write slot
+    size: Array  # int32 scalar, filled slots
+
+
+def buffer_init(capacity: int, example: Any) -> BufferState:
+    """Allocate device storage from a single-transition example pytree."""
+    data = jax.tree.map(
+        lambda x: jnp.zeros((capacity,) + jnp.shape(x), jnp.asarray(x).dtype),
+        example,
+    )
+    return BufferState(
+        data=data, ptr=jnp.zeros((), jnp.int32), size=jnp.zeros((), jnp.int32)
+    )
+
+
+def _buffer_add(state: BufferState, batch: Any) -> BufferState:
+    """Ring-write a batch of transitions (leaves shaped (B, ...)).
+
+    Matches the host ReplayBuffer's semantics exactly, including batches
+    larger than the capacity: only the last ``capacity`` rows survive. The
+    pre-drop keeps the scatter indices unique - with duplicates the winning
+    ``.at[idx].set`` write would be backend-defined."""
+    capacity = jax.tree.leaves(state.data)[0].shape[0]
+    n_total = jax.tree.leaves(batch)[0].shape[0]
+    drop = max(n_total - capacity, 0)
+    if drop:
+        batch = jax.tree.map(lambda b: b[drop:], batch)
+    n = n_total - drop
+    idx = (state.ptr + drop + jnp.arange(n, dtype=jnp.int32)) % capacity
+    data = jax.tree.map(
+        lambda d, b: d.at[idx].set(b.astype(d.dtype)), state.data, batch
+    )
+    return BufferState(
+        data=data,
+        ptr=(state.ptr + n_total) % capacity,
+        size=jnp.minimum(state.size + n_total, capacity),
+    )
+
+
+# XLA:CPU has no buffer donation; donate only where it is implemented so the
+# add is a true in-place device update on accelerators and warning-free on
+# CPU. The backend query is deferred to the first call - probing it at import
+# time would initialize the JAX backend as an import side effect.
+_buffer_add_jitted = None
+
+
+def buffer_add(state: BufferState, batch: Any) -> BufferState:
+    """Jitted ring write; donates the buffer storage where XLA supports it."""
+    global _buffer_add_jitted
+    if _buffer_add_jitted is None:
+        donate: Tuple[int, ...] = (0,) if jax.default_backend() != "cpu" else ()
+        _buffer_add_jitted = jax.jit(_buffer_add, donate_argnums=donate)
+    return _buffer_add_jitted(state, batch)
+
+
+def buffer_gather(state: BufferState, idx: Array) -> Any:
+    """Gather transitions at ``idx`` (any leading shape) from the buffer."""
+    return jax.tree.map(lambda d: d[idx], state.data)
+
+
+def _buffer_sample(state: BufferState, key, batch_size: int) -> Any:
+    idx = jax.random.randint(
+        key, (batch_size,), 0, jnp.maximum(state.size, 1)
+    )
+    return buffer_gather(state, idx)
+
+
+# batch_size shapes the sample, so it is a static (compile-time) argument
+buffer_sample = jax.jit(_buffer_sample, static_argnums=(2,))
+buffer_sample.__doc__ = "Uniform device-side sample of batch_size transitions."
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+def uniform_policy(action_dims: Dict[str, int]) -> Policy:
+    """Masked-uniform exploration policy (the seed's warmup behaviour)."""
+
+    def policy(params, key, obs, hist, hist_mask, masks):
+        logits = {
+            "u": jnp.where(masks["u"], 0.0, A.NEG),
+            "size": jnp.where(masks["size"], 0.0, A.NEG),
+            "decoys": jnp.stack(
+                [jnp.zeros(action_dims["decoys"]),
+                 jnp.where(masks["decoys"], 0.0, A.NEG)], -1
+            ),
+            "p_tx": jnp.zeros(action_dims["p_tx"]),
+            "p_d": jnp.zeros(action_dims["p_d"]),
+        }
+        return A.sample(key, logits), {}
+
+    return policy
+
+
+def sac_policy(action_dims: Dict[str, int], cfg) -> Policy:
+    """Stochastic ICM-CA SAC actor (same math as ``SAC.select_action``)."""
+    from repro.core.agents import sac as SAC  # local import: avoid cycle
+
+    def policy(params, key, obs, hist, hist_mask, masks):
+        logits = SAC.actor_logits(
+            params, obs, hist, hist_mask, masks, action_dims, cfg
+        )
+        return A.sample(key, logits), {}
+
+    return policy
+
+
+# ---------------------------------------------------------------------------
+# scanned episode rollout
+# ---------------------------------------------------------------------------
+
+
+def make_episode_rollout(
+    env: MHSLEnv,
+    policy: Policy,
+    hist_len: int,
+    extra_record: Optional[Callable] = None,
+    record_state: bool = False,
+):
+    """One full ``2S-1``-step episode under ``lax.scan`` (single env).
+
+    Returns ``one_episode(params, st0, key) -> (final_state, traj)`` where
+    ``traj`` leaves are stacked over the episode axis ``T = 2S-1``:
+    obs / obs_next / hist / hist_mask / action / masks / reward / done plus
+    ``leak``/``viol`` diagnostics and any policy ``extras``.
+    ``record_state=True`` additionally stacks the full post-step
+    ``EnvState`` per step as ``traj["env_state"]`` (diagnostics/tests only;
+    trainers leave it off to keep the scan outputs lean).
+
+    ``extra_record(st, action, st2, info) -> dict`` can append fields that
+    need the post-step state (e.g. DQN's flat next-step action mask).
+
+    Key threading matches the seed per-step loop exactly
+    (``key, ka, ks = jax.random.split(key, 3)`` each step), so a rollout
+    from the same initial key is bit-identical to the legacy path.
+    """
+    adims = env.action_dims
+    pair_dim = env.obs_dim + A.flat_dim(adims)
+
+    def one_episode(params, st0: EnvState, key):
+        hist0 = jnp.zeros((hist_len, pair_dim), jnp.float32)
+        hmask0 = jnp.zeros((hist_len,), jnp.float32)
+
+        def step_fn(carry, _):
+            st, hist, hmask, key = carry
+            obs = env.observe(st)
+            masks = env.action_masks(st)
+            key, ka, ks = jax.random.split(key, 3)
+            action, extras = policy(params, ka, obs, hist, hmask, masks)
+            st2, reward, done, info = env.step(st, action, ks)
+            obs2 = env.observe(st2)
+            pair = jnp.concatenate(
+                [obs, A.onehot(action, adims)]
+            ).astype(jnp.float32)
+            hist2 = jnp.roll(hist, -1, axis=0).at[-1].set(pair)
+            hmask2 = jnp.roll(hmask, -1).at[-1].set(1.0)
+            trans = dict(
+                obs=obs.astype(jnp.float32),
+                obs_next=obs2.astype(jnp.float32),
+                hist=hist,
+                hist_mask=hmask,
+                action=action,
+                masks=masks,
+                reward=jnp.asarray(reward, jnp.float32),
+                done=jnp.asarray(done, jnp.float32),
+                leak=jnp.asarray(info["leak"], jnp.float32),
+                viol=((st2.e_r <= 0) | (st2.t_r <= 0)).astype(jnp.float32),
+            )
+            if record_state:
+                trans["env_state"] = st2
+            if extra_record is not None:
+                trans.update(extra_record(st, action, st2, info))
+            trans.update(extras)
+            return (st2, hist2, hmask2, key), trans
+
+        (st_final, _, _, _), traj = jax.lax.scan(
+            step_fn, (st0, hist0, hmask0, key), None, length=env.episode_len
+        )
+        return st_final, traj
+
+    return one_episode
+
+
+def make_batched_rollout(
+    env: MHSLEnv,
+    policy: Policy,
+    hist_len: int,
+    extra_record: Optional[Callable] = None,
+    record_state: bool = False,
+):
+    """``jax.vmap`` the scanned episode over an env population and jit it.
+
+    Returns ``rollout(params, st0_batch, keys) -> (final_states, traj)``
+    with traj leaves shaped ``(num_envs, T, ...)``. The population size is
+    fixed by the shapes of ``st0_batch``/``keys`` (one compile per size).
+    """
+    one = make_episode_rollout(env, policy, hist_len, extra_record,
+                               record_state)
+    return jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))
+
+
+def make_batched_reset(env: MHSLEnv):
+    """Vectorized ``env.reset`` over a batch of PRNG keys."""
+    return jax.jit(jax.vmap(env.reset))
+
+
+# ---------------------------------------------------------------------------
+# fused gradient updates
+# ---------------------------------------------------------------------------
+
+
+def make_fused_update(update_fn, batch_size: int, n_updates: int):
+    """Fuse ``n_updates`` off-policy gradient steps into one jitted scan.
+
+    Batch indices for every step are pre-sampled in one shot, then each
+    scan iteration gathers its minibatch directly from the device buffer -
+    zero host round-trips between gradient steps.
+
+    ``update_fn(params, opt_state, batch) -> (params, opt_state, metrics)``.
+    Returns ``fused(params, opt_state, buf, key)`` -> same triple, with the
+    metrics of the final step.
+    """
+
+    @jax.jit
+    def fused(params, opt_state, buf: BufferState, key):
+        idx = jax.random.randint(
+            key, (n_updates, batch_size), 0, jnp.maximum(buf.size, 1)
+        )
+
+        def body(carry, idx_row):
+            params, opt_state = carry
+            batch = buffer_gather(buf, idx_row)
+            params, opt_state, metrics = update_fn(params, opt_state, batch)
+            return (params, opt_state), metrics
+
+        (params, opt_state), metrics = jax.lax.scan(
+            body, (params, opt_state), idx
+        )
+        return params, opt_state, jax.tree.map(lambda x: x[-1], metrics)
+
+    return fused
+
+
+def make_scan_updates(update_fn, n: int):
+    """Run ``n`` update epochs over one fixed batch inside a jitted scan
+    (the on-policy / PPO analogue of ``make_fused_update``)."""
+
+    @jax.jit
+    def run(params, opt_state, batch):
+        def body(carry, _):
+            params, opt_state = carry
+            params, opt_state, metrics = update_fn(params, opt_state, batch)
+            return (params, opt_state), metrics
+
+        (params, opt_state), metrics = jax.lax.scan(
+            body, (params, opt_state), None, length=n
+        )
+        return params, opt_state, jax.tree.map(lambda x: x[-1], metrics)
+
+    return run
+
+
+def gae(rewards: Array, values: Array, gamma: float, lam: float):
+    """Generalized advantage estimation over one episode (reverse scan).
+
+    ``rewards``/``values``: (T,). The terminal bootstrap value is 0 (MHSL
+    episodes always end at ``2S-1``). Returns (advantages, returns).
+    """
+    v_next = jnp.concatenate([values[1:], jnp.zeros((1,), values.dtype)])
+
+    def body(g, xs):
+        r, v, vn = xs
+        delta = r + gamma * vn - v
+        g = delta + gamma * lam * g
+        return g, g
+
+    _, adv = jax.lax.scan(
+        body, jnp.zeros((), values.dtype), (rewards, values, v_next),
+        reverse=True,
+    )
+    return adv, adv + values
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by the trainers
+# ---------------------------------------------------------------------------
+
+
+def flatten_transitions(traj: Any, keys: Tuple[str, ...]) -> Any:
+    """Select ``keys`` from a (num_envs, T, ...) trajectory and flatten the
+    leading two axes into one transition batch of num_envs * T rows."""
+    sub = {k: traj[k] for k in keys}
+    return jax.tree.map(
+        lambda x: x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]), sub
+    )
+
+
+def episode_reset_keys(reset_key, num_envs: int, resample: bool):
+    """Per-env reset keys for one chunk. With ``resample`` each env draws a
+    fresh geometry; otherwise every env replays the same geometry (the
+    seed's fixed-geometry training setup)."""
+    if num_envs == 1:
+        return reset_key[None]
+    if resample:
+        return jax.random.split(reset_key, num_envs)
+    return jnp.broadcast_to(reset_key, (num_envs,) + reset_key.shape)
+
+
+# ---------------------------------------------------------------------------
+# legacy reference: the seed's per-step host loop
+# ---------------------------------------------------------------------------
+
+
+def make_legacy_episode(env: MHSLEnv, policy: Policy, hist_len: int):
+    """The seed implementation's dispatch pattern: one jitted call per env
+    operation, host numpy history window, one Python iteration per step.
+
+    Kept only as (a) the baseline for ``benchmarks/throughput.py`` and
+    (b) the ground truth for the rollout-equivalence test. Trainers use the
+    scanned engine above.
+
+    Returns ``run(params, st0, key) -> (states, rewards)`` where ``states``
+    is the list of post-step ``EnvState``s and ``rewards`` the per-step
+    reward arrays.
+    """
+    adims = env.action_dims
+    pair_dim = env.obs_dim + A.flat_dim(adims)
+    env_step = jax.jit(env.step)
+    env_observe = jax.jit(env.observe)
+    env_masks = jax.jit(env.action_masks)
+    pol = jax.jit(policy)
+
+    def run(params, st: EnvState, key):
+        hist = np.zeros((hist_len, pair_dim), np.float32)
+        hist_mask = np.zeros((hist_len,), np.float32)
+        states, rewards = [], []
+        for _ in range(env.episode_len):
+            obs = env_observe(st)
+            masks = env_masks(st)
+            key, ka, ks = jax.random.split(key, 3)
+            action, _ = pol(
+                params, ka, obs, jnp.asarray(hist), jnp.asarray(hist_mask),
+                masks,
+            )
+            st, reward, done, info = env_step(st, action, ks)
+            pair = np.concatenate(
+                [np.asarray(obs, np.float32),
+                 np.asarray(A.onehot(action, adims), np.float32)]
+            )
+            hist = np.roll(hist, -1, axis=0)
+            hist[-1] = pair
+            hist_mask = np.roll(hist_mask, -1)
+            hist_mask[-1] = 1.0
+            states.append(st)
+            rewards.append(reward)
+        return states, rewards
+
+    return run

@@ -281,19 +281,26 @@ class MHSLEnv:
         rate = data_rate(p_tx, d_tx_rx, decoy_p, d_dec_rx, self.net)
         t_hop = jnp.where(has_hop, tx_time(bits, rate), 0.0)
 
-        # stage compute times (receiving stage fwd / transmitting stage bwd)
-        st = jnp.where(fwd_hop, hop + 1, hop + 1)
+        # stage compute times (Eq. 20): on a forward hop the RECEIVING stage
+        # (hop+1) runs its forward pass; on a backward hop the TRANSMITTING
+        # stage is stage hop+1 (tx = stage_dev[hop+1] above) and it runs its
+        # backward pass before sending the gradient - both directions charge
+        # stage hop+1, only the fwd/bwd FLOP table differs.
+        st = hop + 1
         lo = jnp.where(st == 0, 0, boundaries[jnp.clip(st - 1, 0, S - 1)])
         hi = boundaries[st]
+        stage_fwd_flops = fwd_cum[hi] - fwd_cum[lo]
+        stage_bwd_flops = bwd_cum[hi] - bwd_cum[lo]
+        stage_flops = jnp.where(fwd_hop, stage_fwd_flops, stage_bwd_flops)
         t_comp = jnp.where(
             fwd_hop,
-            compute_time_fwd(fwd_cum[hi] - fwd_cum[lo], self.net),
-            compute_time_bwd(bwd_cum[hi] - bwd_cum[lo], self.net),
+            compute_time_fwd(stage_fwd_flops, self.net),
+            compute_time_bwd(stage_bwd_flops, self.net),
         )
         t_comp = jnp.where(has_hop, t_comp, 0.0)
-        e_comp = jnp.where(
-            has_hop, compute_energy(fwd_cum[hi] - fwd_cum[lo], self.net), 0.0
-        )
+        # energy (Eq. 11) charges the same direction-dependent FLOPs the
+        # delay model does: fwd table on forward hops, bwd table on backward
+        e_comp = jnp.where(has_hop, compute_energy(stage_flops, self.net), 0.0)
         e_hop = (p_tx + decoy_p.sum()) * t_hop + e_comp
 
         # ---- 3) leakage (Eqs. 12-13, 20-21) ----------------------------------

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip, unit tests still run
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.channel import NetworkConfig
 from repro.core.env import MHSLEnv, NBINS, OMEGA_1, OMEGA_2
@@ -135,6 +138,64 @@ def test_transformer_profile_env_runs():
         st_, r, done, info = env.step(st_, a, ks)
         assert np.isfinite(float(r))
     assert int(np.asarray(st_.boundaries)[-1]) == cfg.num_layers
+
+
+def test_compute_time_attribution_fwd_vs_bwd(env):
+    """Regression for the once-dead branch in ``env.step``'s stage-compute
+    charge (Eq. 20): a forward hop charges the RECEIVING stage's forward
+    FLOPs, a backward hop charges the TRANSMITTING stage's backward FLOPs -
+    both resolve to stage ``hop+1``, but the FLOP tables must differ. The
+    energy model (Eq. 11) must charge the same direction-dependent FLOPs."""
+    from repro.core.channel import (
+        compute_energy, compute_time_bwd, compute_time_fwd,
+    )
+
+    prof = env.profile
+    fwd_cum = np.concatenate([[0.0], np.cumsum(prof.fwd_flops)])
+    bwd_cum = np.concatenate([[0.0], np.cumsum(prof.bwd_flops)])
+    S = env.S
+    key = jax.random.PRNGKey(3)
+    st_ = env.reset(jax.random.PRNGKey(0))
+    checked_fwd = checked_bwd = 0
+    for i in range(env.episode_len):
+        key, ka, ks = jax.random.split(key, 3)
+        masks = env.action_masks(st_)
+        a = _rand_action(env, ka, masks)
+        st2, r, done, info = env.step(st_, a, ks)
+        n = int(st_.n)
+        if n >= 2:
+            fwd = n <= S
+            hop = (n - 2) if fwd else (2 * S - n - 1)
+            stage = hop + 1  # fwd: receiver; bwd: transmitter
+            b = np.asarray(st2.boundaries)
+            lo, hi = b[stage - 1], b[stage]
+            flops_fwd = fwd_cum[hi] - fwd_cum[lo]
+            flops_bwd = bwd_cum[hi] - bwd_cum[lo]
+            expect = float(
+                compute_time_fwd(jnp.asarray(flops_fwd), env.net) if fwd
+                else compute_time_bwd(jnp.asarray(flops_bwd), env.net)
+            )
+            t_comp = float(st_.t_r) - float(st2.t_r) - float(info["t_hop"])
+            np.testing.assert_allclose(t_comp, expect, rtol=1e-4, atol=1e-5)
+            # energy: e_hop = (p_tx + sum decoy_p) * t_hop + e_comp(flops)
+            flops = flops_fwd if fwd else flops_bwd
+            p_tx = env.net.power_levels[int(a["p_tx"])]
+            expect_e = (
+                (p_tx + float(np.asarray(info["decoy_p"]).sum()))
+                * float(info["t_hop"])
+                + float(compute_energy(jnp.asarray(flops), env.net))
+            )
+            np.testing.assert_allclose(
+                float(st_.e_r) - float(st2.e_r), expect_e, rtol=1e-4, atol=1e-5
+            )
+            if fwd:
+                checked_fwd += 1
+            else:
+                # the regression: bwd attribution must use the bwd table
+                assert flops_bwd != flops_fwd
+                checked_bwd += 1
+        st_ = st2
+    assert checked_fwd == S - 1 and checked_bwd == S - 1
 
 
 def test_observe_shape_and_location_blinding():
