@@ -34,6 +34,54 @@ class BenchConfig:
         return 15 if self.quick else 50
 
 
+def train_standard_agents(env, bench: BenchConfig, seed: int = 0, *,
+                          episodes: int | None = None,
+                          warmup: int | None = None,
+                          algos=("icm_ca", "sac", "ppo"),
+                          scenario=None, num_envs: int | None = None):
+    """The agent-training preamble shared by fig4/fig5/fig6.
+
+    Trains the requested algorithms on ``env`` (optionally under a
+    ``ScenarioParams`` override) and returns
+    ``{name: {"params", "cfg", "result", "seconds"}}``. Algorithms:
+    ``icm_ca`` (full SAC), ``sac`` (no ICM/CA ablation), ``ppo``, ``dqn``.
+    """
+    from repro.core.agents.dqn import DQNConfig, train_dqn
+    from repro.core.agents.loops import train_sac
+    from repro.core.agents.ppo import PPOConfig, train_ppo
+    from repro.core.agents.sac import SACConfig
+
+    episodes = bench.episodes if episodes is None else episodes
+    warmup = bench.warmup if warmup is None else warmup
+    num_envs = bench.num_envs if num_envs is None else num_envs
+    out = {}
+    for name in algos:
+        with Timer() as t:
+            if name == "icm_ca":
+                cfg = SACConfig()
+                res = train_sac(env, cfg, episodes=episodes,
+                                warmup_episodes=warmup, seed=seed,
+                                num_envs=num_envs, scenario=scenario)
+            elif name == "sac":
+                cfg = SACConfig(use_icm=False, use_ca=False)
+                res = train_sac(env, cfg, episodes=episodes,
+                                warmup_episodes=warmup, seed=seed,
+                                num_envs=num_envs, scenario=scenario)
+            elif name == "ppo":
+                cfg = PPOConfig()
+                res = train_ppo(env, cfg, episodes=episodes, seed=seed,
+                                num_envs=num_envs, scenario=scenario)
+            elif name == "dqn":
+                cfg = DQNConfig(eps_decay_episodes=max(episodes // 2, 1))
+                res = train_dqn(env, cfg, episodes=episodes, seed=seed,
+                                num_envs=num_envs, scenario=scenario)
+            else:
+                raise ValueError(f"unknown algo {name!r}")
+        out[name] = {"params": res.params, "cfg": cfg, "result": res,
+                     "seconds": t.seconds}
+    return out
+
+
 def save_json(name: str, payload) -> str:
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.json")

@@ -7,35 +7,25 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import BenchConfig, Timer, emit_csv_row, episodes_to_reach, save_json
-from repro.core.agents.dqn import DQNConfig, train_dqn
-from repro.core.agents.loops import train_sac
-from repro.core.agents.ppo import PPOConfig, train_ppo
-from repro.core.agents.sac import SACConfig
+from benchmarks.common import (
+    BenchConfig, emit_csv_row, episodes_to_reach, save_json,
+    train_standard_agents,
+)
 from repro.core.env import MHSLEnv
 from repro.core.profiles import resnet101_profile
 
 
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
-    curves = {}
-    with Timer() as t:
-        res = train_sac(env, SACConfig(), episodes=bench.episodes,
-                        warmup_episodes=bench.warmup, seed=seed,
-                        num_envs=bench.num_envs)
-    curves["icm_ca"] = {"reward": res.episode_reward, "leak": res.episode_leak,
-                        "states": res.states_explored, "seconds": t.seconds}
-    with Timer() as t:
-        res = train_ppo(env, PPOConfig(), episodes=bench.episodes, seed=seed,
-                        num_envs=bench.num_envs)
-    curves["ppo"] = {"reward": res.episode_reward, "leak": res.episode_leak,
-                     "states": res.states_explored, "seconds": t.seconds}
-    with Timer() as t:
-        res = train_dqn(env, DQNConfig(eps_decay_episodes=bench.episodes // 2),
-                        episodes=bench.episodes, seed=seed,
-                        num_envs=bench.num_envs)
-    curves["dqn"] = {"reward": res.episode_reward, "leak": res.episode_leak,
-                     "states": res.states_explored, "seconds": t.seconds}
+    agents = train_standard_agents(env, bench, seed,
+                                   algos=("icm_ca", "ppo", "dqn"))
+    curves = {
+        name: {"reward": a["result"].episode_reward,
+               "leak": a["result"].episode_leak,
+               "states": a["result"].states_explored,
+               "seconds": a["seconds"]}
+        for name, a in agents.items()
+    }
 
     finals = {k: float(np.mean(v["reward"][-10:])) for k, v in curves.items()}
     thresh = 0.9 * finals["icm_ca"]

@@ -3,74 +3,56 @@
 Agents (ICM-CA, plain SAC, PPO) are trained at q=0.8 (Table I) and
 evaluated across q in {0.3 .. 0.9}. Paper claims ICM-CA leaks ~13% less
 than SAC and ~22% less than PPO.
+
+The q sweep rides the scenario API: all five points are a stacked
+``ScenarioParams`` batch evaluated in ONE jitted call per agent
+(``evaluate_population``) - no env re-instantiation, no per-point
+recompile, and PPO evaluates on the same vectorized rollout engine as
+the SAC agents (the seed's per-step host eval loop is gone).
 """
 from __future__ import annotations
 
-from dataclasses import replace
-
 import numpy as np
 
-from benchmarks.common import BenchConfig, emit_csv_row, save_json
-from repro.core.agents import action_space as A
-from repro.core.agents.loops import evaluate_sac, train_sac
-from repro.core.agents.ppo import PPOConfig, make_ppo_update, ppo_logits, train_ppo
-from repro.core.agents.sac import SACConfig
-from repro.core.channel import NetworkConfig
+from benchmarks.common import (
+    BenchConfig, emit_csv_row, save_json, train_standard_agents,
+)
+from repro.core.agents import rollout as R
+from repro.core.agents.ppo import ppo_policy
 from repro.core.env import MHSLEnv
 from repro.core.profiles import resnet101_profile
+from repro.core.scenario import evaluate_population, scenario_grid, stack_scenarios
 
 QS = [0.3, 0.45, 0.6, 0.75, 0.9]
-
-
-def _eval_ppo(env, params, episodes, seed=500):
-    import jax
-    import jax.numpy as jnp
-
-    key = jax.random.PRNGKey(seed)
-    adims = env.action_dims
-    env_step = jax.jit(env.step)
-    tot_leak = 0.0
-    for ep in range(episodes):
-        key, kr = jax.random.split(key)
-        st = env.reset(kr)
-        for t in range(env.episode_len):
-            key, ka, ks = jax.random.split(key, 3)
-            obs = env.observe(st)
-            masks = env.action_masks(st)
-            logits = ppo_logits(params, obs, masks, adims)
-            a = A.sample(ka, logits)
-            st, r, done, info = env_step(st, a, ks)
-            tot_leak += float(info["leak"])
-    return tot_leak / episodes
 
 
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     prof = resnet101_profile(batch=1)
     env = MHSLEnv(profile=prof)
+    adims = env.action_dims
 
-    agents = {}
-    cfg_full = SACConfig()
-    agents["icm_ca"] = (train_sac(env, cfg_full, episodes=bench.episodes,
-                                  warmup_episodes=bench.warmup, seed=seed,
-                                  num_envs=bench.num_envs).params, cfg_full)
-    cfg_plain = SACConfig(use_icm=False, use_ca=False)
-    agents["sac"] = (train_sac(env, cfg_plain, episodes=bench.episodes,
-                               warmup_episodes=bench.warmup, seed=seed,
-                               num_envs=bench.num_envs).params, cfg_plain)
-    ppo_params = train_ppo(env, PPOConfig(), episodes=bench.episodes, seed=seed,
-                           num_envs=bench.num_envs).params
+    agents = train_standard_agents(env, bench, seed,
+                                   algos=("icm_ca", "sac", "ppo"))
+    scenarios = stack_scenarios(scenario_grid(env.scenario(), monitor_prob=QS))
+
+    leak = {}
+    for name in ("icm_ca", "sac"):
+        a = agents[name]
+        leak[name] = evaluate_population(
+            env, R.sac_policy(adims, a["cfg"]), a["params"], scenarios,
+            episodes=bench.eval_episodes, hist_len=a["cfg"].hist_len,
+        )["leak"]
+    leak["ppo"] = evaluate_population(
+        env, ppo_policy(adims), agents["ppo"]["params"], scenarios,
+        episodes=bench.eval_episodes, seed=500,
+    )["leak"]
 
     rows = {}
-    for q in QS:
-        env_q = MHSLEnv(profile=prof, net=replace(NetworkConfig(), monitor_prob=q))
-        row = {}
-        for name, (params, cfg) in agents.items():
-            row[name] = evaluate_sac(env_q, params, cfg, episodes=bench.eval_episodes)["leak"]
-        row["ppo"] = _eval_ppo(env_q, ppo_params, bench.eval_episodes)
-        rows[q] = row
+    for i, q in enumerate(QS):
+        rows[q] = {name: float(leak[name][i]) for name in leak}
         emit_csv_row(
             f"fig5/q={q}", 0.0,
-            " ".join(f"{k}={v:.3f}" for k, v in row.items()),
+            " ".join(f"{k}={v:.3f}" for k, v in rows[q].items()),
         )
 
     mean = {k: float(np.mean([rows[q][k] for q in QS])) for k in rows[QS[0]]}

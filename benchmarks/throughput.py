@@ -6,6 +6,10 @@ Measures, with the SAME ``SACConfig`` on the current backend:
   per env call, host history window) vs the vmapped ``lax.scan`` rollout.
 * ``updates_per_sec`` - per-call jitted SAC updates fed by the host-numpy
   replay buffer vs the fused update scan sampling the device buffer.
+* ``scenario_sweep`` - a 5-point ``monitor_prob`` evaluation sweep: the
+  seed's per-point loop (fresh env + fresh jits per point, one recompile
+  each) vs one stacked-``ScenarioParams`` call through the population
+  evaluator (compiles exactly once). Acceptance: >=3x wall-clock.
 
 Emits the scaffold CSV rows, saves each run's numbers to the bench OUT_DIR,
 and records the baseline in ``BENCH_throughput.json`` at the repo root so
@@ -24,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from dataclasses import replace
+
 from benchmarks.common import BenchConfig, emit_csv_row, save_json
 from repro.core.agents import rollout as R
 from repro.core.agents import sac as SAC
@@ -31,6 +37,9 @@ from repro.core.agents.buffer import ReplayBuffer
 from repro.core.agents.loops import _SAC_FIELDS, _sac_example
 from repro.core.env import MHSLEnv
 from repro.core.profiles import resnet101_profile
+from repro.core.scenario import (
+    make_population_evaluator, scenario_grid, stack_scenarios,
+)
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_throughput.json")
@@ -121,6 +130,55 @@ def _time_engine_updates(update, params, opt_state, dev_buf, cfg,
     return repeats * n_updates / (time.perf_counter() - t0)
 
 
+SWEEP_QS = (0.3, 0.45, 0.6, 0.75, 0.9)
+
+
+def _time_scenario_sweep(env, params, cfg, episodes: int, key):
+    """5-point ``monitor_prob`` sweep: per-point re-jit loop (the seed's
+    pattern - fresh env + fresh jits per point) vs ONE stacked-scenario
+    evaluation through the population evaluator. Returns wall-clocks,
+    retrace counts, and the speedup. Both sides time end-to-end including
+    compiles - that is precisely the cost the scenario API removes."""
+    k_reset, k_act = jax.random.split(key)
+    rkeys = jax.random.split(k_reset, episodes)
+    akeys = jax.random.split(k_act, episodes)
+
+    # --- baseline: re-instantiate env + rebuild jits per sweep point -----
+    t0 = time.perf_counter()
+    loop_leak, loop_traces = [], 0
+    for q in SWEEP_QS:
+        env_q = MHSLEnv(profile=env.profile,
+                        net=replace(env.net, monitor_prob=q))
+        rollout = R.make_batched_rollout(
+            env_q, R.sac_policy(env_q.action_dims, cfg), cfg.hist_len)
+        st0 = R.make_batched_reset(env_q)(rkeys)
+        _, traj = rollout(params, st0, akeys)
+        loop_leak.append(float(traj["leak"].sum()) / episodes)
+        loop_traces += rollout.trace_count[0]
+    dt_loop = time.perf_counter() - t0
+
+    # --- scenario API: one compiled eval step for the whole grid ---------
+    evaluator = make_population_evaluator(
+        env, R.sac_policy(env.action_dims, cfg), cfg.hist_len)
+    scens = stack_scenarios(
+        scenario_grid(env.scenario(), monitor_prob=list(SWEEP_QS)))
+    t0 = time.perf_counter()
+    out = evaluator(params, rkeys, akeys, scens)
+    sweep_leak = [float(x) for x in jax.device_get(out["leak"])]
+    dt_sweep = time.perf_counter() - t0
+
+    return {
+        "points": len(SWEEP_QS),
+        "episodes_per_point": episodes,
+        "per_point_rejit_s": dt_loop,
+        "scenario_sweep_s": dt_sweep,
+        "sweep_speedup": dt_loop / dt_sweep,
+        "compiles": {"per_point_loop": loop_traces,
+                     "scenario_sweep": evaluator.trace_count[0]},
+        "leak": {"per_point_loop": loop_leak, "scenario_sweep": sweep_leak},
+    }
+
+
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
     cfg = SAC.SACConfig()
@@ -146,6 +204,10 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
                                       n_updates)
     update_speedup = engine_ups / legacy_ups
 
+    key, k3 = jax.random.split(key)
+    sweep = _time_scenario_sweep(env, params, cfg,
+                                 8 if bench.quick else 32, k3)
+
     emit_csv_row("throughput/legacy_env_steps_per_sec", 1e6 / legacy_sps,
                  f"env_steps_per_sec={legacy_sps:.0f}")
     emit_csv_row("throughput/engine_env_steps_per_sec", 1e6 / engine_sps,
@@ -154,9 +216,14 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
                  f"updates_per_sec={legacy_ups:.0f}")
     emit_csv_row("throughput/engine_updates_per_sec", 1e6 / engine_ups,
                  f"updates_per_sec={engine_ups:.0f}")
+    emit_csv_row("throughput/scenario_sweep", 1e6 * sweep["scenario_sweep_s"],
+                 f"sweep_speedup={sweep['sweep_speedup']:.1f}x "
+                 f"compiles={sweep['compiles']['scenario_sweep']}"
+                 f"(vs {sweep['compiles']['per_point_loop']})")
     emit_csv_row("throughput/summary", 0.0,
                  f"rollout_speedup={rollout_speedup:.1f}x "
-                 f"update_speedup={update_speedup:.1f}x")
+                 f"update_speedup={update_speedup:.1f}x "
+                 f"scenario_sweep_speedup={sweep['sweep_speedup']:.1f}x")
 
     payload = {
         "backend": jax.default_backend(),
@@ -165,12 +232,22 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
         "updates_per_sec": {"legacy": legacy_ups, "engine": engine_ups},
         "rollout_speedup": rollout_speedup,
         "update_speedup": update_speedup,
+        "scenario_sweep": sweep,
     }
     save_json("throughput", payload)
     refresh = os.environ.get("BENCH_THROUGHPUT_REFRESH") == "1"
     if refresh or not os.path.exists(BASELINE_PATH):
         with open(BASELINE_PATH, "w") as f:
             json.dump(payload, f, indent=1, default=float)
+    else:
+        # the baseline is write-once for existing metrics, but a newly
+        # added metric gets recorded into it the first time it is measured
+        with open(BASELINE_PATH) as f:
+            baseline = json.load(f)
+        if "scenario_sweep" not in baseline:
+            baseline["scenario_sweep"] = sweep
+            with open(BASELINE_PATH, "w") as f:
+                json.dump(baseline, f, indent=1, default=float)
     return payload
 
 

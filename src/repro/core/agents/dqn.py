@@ -139,7 +139,9 @@ def _make_dqn_update(cfg: DQNConfig, opt):
 
 
 def train_dqn(env: MHSLEnv, cfg: DQNConfig, episodes: int = 200, seed: int = 0,
-              num_envs: int = 1):
+              num_envs: int = 1, scenario=None):
+    """``scenario`` (``ScenarioParams``) overrides the env physics as a
+    runtime value - sweep points share the jit caches of this call."""
     from repro.core.agents.loops import TrainResult, _chunk_metrics
 
     if num_envs < 1:
@@ -180,9 +182,9 @@ def train_dqn(env: MHSLEnv, cfg: DQNConfig, episodes: int = 200, seed: int = 0,
         key, ksub = jax.random.split(key)
         akeys = jax.random.split(ksub, num_envs)
 
-        st0 = reset_batch(rkeys)
+        st0 = reset_batch(rkeys, scenario)
         bundle = {"q": learner["q"], "eps": jnp.asarray(eps, jnp.float32)}
-        st_final, traj = rollout(bundle, st0, akeys)
+        st_final, traj = rollout(bundle, st0, akeys, scenario)
         traj["mask_next"] = jnp.concatenate(
             [traj["fm"][:, 1:], final_mask(st_final)[:, None]], axis=1
         )

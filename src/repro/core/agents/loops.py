@@ -110,8 +110,15 @@ def train_sac(
     warmup_episodes: int = 10,
     resample_positions: bool = False,
     num_envs: int = 1,
+    scenario=None,
 ) -> TrainResult:
     """ICM-CA SAC training on the device-resident engine.
+
+    ``scenario`` (a ``repro.core.scenario.ScenarioParams``) overrides the
+    env's default physics as a runtime value - training the same env
+    object across sweep points re-uses every jit cache. ``None`` keeps
+    the constructor defaults. To train a whole scenario batch in one
+    vectorized run, use ``repro.core.scenario.train_population``.
 
     ``num_envs`` environments run as one vmapped population; each chunk
     rolls out ``num_envs`` full episodes under a single jitted scan, then
@@ -161,9 +168,9 @@ def train_sac(
         key, ksub = jax.random.split(key)
         akeys = jax.random.split(ksub, num_envs)
 
-        st0 = reset_batch(rkeys)
+        st0 = reset_batch(rkeys, scenario)
         rollout = rollout_uniform if ep < warmup_episodes else rollout_actor
-        _, traj = rollout(params, st0, akeys)
+        _, traj = rollout(params, st0, akeys, scenario)
 
         buf = R.buffer_add(buf, R.flatten_transitions(traj, _SAC_FIELDS))
         _chunk_metrics(result, seen, traj, ep, episodes, num_envs)
@@ -180,16 +187,20 @@ def train_sac(
 
 
 def evaluate_sac(env: MHSLEnv, params, cfg: SAC.SACConfig, episodes: int = 20,
-                 seed: int = 1000) -> Dict[str, float]:
+                 seed: int = 1000, scenario=None) -> Dict[str, float]:
     """Policy evaluation: all ``episodes`` run as one vmapped population
-    (fresh geometry per episode, matching the seed's evaluation draw)."""
+    (fresh geometry per episode, matching the seed's evaluation draw).
+    ``scenario`` sweeps evaluation physics without recompiling; for a
+    whole grid in one call use ``repro.core.scenario.evaluate_population``.
+    """
     key = jax.random.PRNGKey(seed)
     k_reset, k_act = jax.random.split(key)
     rollout = R.make_batched_rollout(
         env, R.sac_policy(env.action_dims, cfg), cfg.hist_len
     )
-    st0 = R.make_batched_reset(env)(jax.random.split(k_reset, episodes))
-    _, traj = rollout(params, st0, jax.random.split(k_act, episodes))
+    st0 = R.make_batched_reset(env)(jax.random.split(k_reset, episodes),
+                                    scenario)
+    _, traj = rollout(params, st0, jax.random.split(k_act, episodes), scenario)
     return {
         "reward": float(jnp.sum(traj["reward"])) / episodes,
         "leak": float(jnp.sum(traj["leak"])) / episodes,

@@ -97,7 +97,9 @@ _PPO_FIELDS = ("obs", "masks", "action", "logp", "adv", "ret")
 
 
 def train_ppo(env: MHSLEnv, cfg: PPOConfig, episodes: int = 200, seed: int = 0,
-              num_envs: int = 1):
+              num_envs: int = 1, scenario=None):
+    """``scenario`` (``ScenarioParams``) overrides the env physics as a
+    runtime value - sweep points share the jit caches of this call."""
     from repro.core.agents.loops import TrainResult, _chunk_metrics
 
     if num_envs < 1:
@@ -132,8 +134,8 @@ def train_ppo(env: MHSLEnv, cfg: PPOConfig, episodes: int = 200, seed: int = 0,
         key, ksub = jax.random.split(key)
         akeys = jax.random.split(ksub, num_envs)
 
-        st0 = reset_batch(rkeys)
-        _, traj = rollout(params, st0, akeys)
+        st0 = reset_batch(rkeys, scenario)
+        _, traj = rollout(params, st0, akeys, scenario)
         adv, ret = gae_batch(traj["reward"], traj["v"])
         traj = dict(traj, adv=adv, ret=ret)
 

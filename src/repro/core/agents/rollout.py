@@ -184,7 +184,14 @@ def make_episode_rollout(
 ):
     """One full ``2S-1``-step episode under ``lax.scan`` (single env).
 
-    Returns ``one_episode(params, st0, key) -> (final_state, traj)`` where
+    Returns ``one_episode(params, st0, key, scenario=None) ->
+    (final_state, traj)``. ``scenario`` is a ``ScenarioParams`` pytree of
+    runtime physics values; ``None`` falls back to ``env.scenario()``
+    (the constructor defaults). Because the scenario is an ARGUMENT, one
+    compiled rollout serves every sweep point - and an outer ``jax.vmap``
+    over a stacked scenario batch composes with the ``num_envs`` vmap
+    (see ``repro.core.scenario.make_population_rollout``).
+
     ``traj`` leaves are stacked over the episode axis ``T = 2S-1``:
     obs / obs_next / hist / hist_mask / action / masks / reward / done plus
     ``leak``/``viol`` diagnostics and any policy ``extras``.
@@ -202,18 +209,19 @@ def make_episode_rollout(
     adims = env.action_dims
     pair_dim = env.obs_dim + A.flat_dim(adims)
 
-    def one_episode(params, st0: EnvState, key):
+    def one_episode(params, st0: EnvState, key, scenario=None):
+        sp = env.scenario() if scenario is None else scenario
         hist0 = jnp.zeros((hist_len, pair_dim), jnp.float32)
         hmask0 = jnp.zeros((hist_len,), jnp.float32)
 
         def step_fn(carry, _):
             st, hist, hmask, key = carry
-            obs = env.observe(st)
+            obs = env.observe(st, sp)
             masks = env.action_masks(st)
             key, ka, ks = jax.random.split(key, 3)
             action, extras = policy(params, ka, obs, hist, hmask, masks)
-            st2, reward, done, info = env.step(st, action, ks)
-            obs2 = env.observe(st2)
+            st2, reward, done, info = env.step(st, action, ks, sp)
+            obs2 = env.observe(st2, sp)
             pair = jnp.concatenate(
                 [obs, A.onehot(action, adims)]
             ).astype(jnp.float32)
@@ -255,18 +263,46 @@ def make_batched_rollout(
 ):
     """``jax.vmap`` the scanned episode over an env population and jit it.
 
-    Returns ``rollout(params, st0_batch, keys) -> (final_states, traj)``
-    with traj leaves shaped ``(num_envs, T, ...)``. The population size is
-    fixed by the shapes of ``st0_batch``/``keys`` (one compile per size).
+    Returns ``rollout(params, st0_batch, keys, scenario=None) ->
+    (final_states, traj)`` with traj leaves shaped ``(num_envs, T, ...)``.
+    The population size is fixed by the shapes of ``st0_batch``/``keys``
+    (one compile per size). ``scenario`` is shared by the whole
+    population and is a runtime argument: sweeping its values re-uses the
+    jit cache (``rollout.jitted`` / ``rollout.trace_count`` expose the
+    inner jit for recompile auditing).
     """
     one = make_episode_rollout(env, policy, hist_len, extra_record,
                                record_state)
-    return jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))
+    trace_count = [0]
+
+    def _one(params, st0, key, sp):
+        trace_count[0] += 1  # executes only while (re)tracing
+        return one(params, st0, key, sp)
+
+    jitted = jax.jit(jax.vmap(_one, in_axes=(None, 0, 0, None)))
+    default_sp = env.scenario()  # built once; the default path re-uses it
+
+    def rollout(params, st0, keys, scenario=None):
+        return jitted(params, st0, keys,
+                      default_sp if scenario is None else scenario)
+
+    rollout.jitted = jitted
+    rollout.trace_count = trace_count
+    return rollout
 
 
 def make_batched_reset(env: MHSLEnv):
-    """Vectorized ``env.reset`` over a batch of PRNG keys."""
-    return jax.jit(jax.vmap(env.reset))
+    """Vectorized ``env.reset`` over a batch of PRNG keys. The returned
+    ``reset(keys, scenario=None)`` takes the scenario as a runtime value
+    (budgets / area feed the initial state)."""
+    jitted = jax.jit(jax.vmap(env.reset, in_axes=(0, None)))
+    default_sp = env.scenario()
+
+    def reset(keys, scenario=None):
+        return jitted(keys, default_sp if scenario is None else scenario)
+
+    reset.jitted = jitted
+    return reset
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,14 @@
 TDMA links with Rayleigh fading; deceptive-signal devices appear as
 interference in the SINR of eavesdropped/legitimate links. All functions
 are jnp-pure and jittable so the RL environment can lax.scan over them.
+
+The ``net`` argument of every physics function is duck-typed: it accepts
+either the static ``NetworkConfig`` (host floats, baked into the jit as
+constants - the legacy path) or a ``repro.core.scenario.ScenarioParams``
+pytree (traced jnp scalars - the sweep path, where one compiled function
+serves every parameter point). Both expose the same attribute names
+(``bandwidth_hz``, ``noise_w``, ``rayleigh_o``, ``f_cpu_hz``,
+``theta_chip``).
 """
 from __future__ import annotations
 
@@ -17,7 +25,15 @@ Array = jax.Array
 
 @dataclass(frozen=True)
 class NetworkConfig:
-    """Paper Table I defaults."""
+    """Paper Table I defaults.
+
+    Structure-defining fields (``num_devices``, ``num_eaves``,
+    ``max_split``, ``len(power_levels)``) fix array SHAPES and stay
+    static on ``MHSLEnv``; every other field is a physics VALUE whose
+    runtime representation is ``repro.core.scenario.ScenarioParams``
+    (built from this config via ``scenario_from_net``). Sweeping a value
+    field through ``ScenarioParams`` never recompiles.
+    """
 
     num_devices: int = 6  # U
     num_eaves: int = 2  # E
@@ -96,11 +112,13 @@ def compute_energy(flops: Array, net: NetworkConfig) -> Array:
     return net.theta_chip * net.f_cpu_hz**2 * (flops / IPC)
 
 
-def sample_positions(key, net: NetworkConfig):
-    """Device + eavesdropper positions uniform in the area."""
+def sample_positions(key, num_devices: int, num_eaves: int, area_m):
+    """Device + eavesdropper positions uniform in the area. ``area_m`` may
+    be a traced scalar (``ScenarioParams.area_m``); the counts are static
+    shapes."""
     k1, k2 = jax.random.split(key)
-    dev = jax.random.uniform(k1, (net.num_devices, 2)) * net.area_m
-    eav = jax.random.uniform(k2, (net.num_eaves, 2)) * net.area_m
+    dev = jax.random.uniform(k1, (num_devices, 2)) * area_m
+    eav = jax.random.uniform(k2, (num_eaves, 2)) * area_m
     return dev, eav
 
 

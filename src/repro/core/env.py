@@ -17,11 +17,21 @@ Action (factored discrete, masked):
 State obs (Eq. 15): remaining energy/time, unassigned model fraction,
 per-device assignment vector r, transmitter one-hot v, distances to
 eavesdroppers l_M (zeroed when locations unknown) and devices l_D, phase.
+
+Static vs dynamic split: ``MHSLEnv`` itself pins only the SHAPES
+(U, E_max, S, NBINS, number of power levels, layer profile). Every
+physics constant - budgets, monitoring probabilities, power-level
+values, bandwidth/noise, leakage scale, CPU/energy coefficients, the
+eavesdropper active-mask - lives in a ``ScenarioParams`` pytree
+(``repro.core.scenario``) passed as a runtime argument to
+``reset``/``observe``/``step``. One compiled step therefore serves every
+sweep point; ``env.scenario()`` builds the defaults matching the
+constructor flags, and omitting the argument falls back to it.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +48,7 @@ from repro.core.channel import (
 )
 from repro.core.leakage import sample_leakage
 from repro.core.profiles import LayerProfile
+from repro.core.scenario import ScenarioParams, scenario_from_net
 
 Array = jax.Array
 
@@ -108,6 +119,18 @@ class MHSLEnv:
         # l_D (U+1), phase, n/2S
         return 3 + (self.U + 1) + (self.U + 1) + self.E + (self.U + 1) + 2
 
+    # ---- dynamic physics ---------------------------------------------------
+    def scenario(self) -> ScenarioParams:
+        """Default dynamic-physics pytree matching the constructor flags."""
+        return scenario_from_net(
+            self.net,
+            know_eave_locations=self.know_eave_locations,
+            leak_scale=self.leak_scale,
+        )
+
+    def _params(self, params: Optional[ScenarioParams]) -> ScenarioParams:
+        return self.scenario() if params is None else params
+
     # ---- constants as jnp --------------------------------------------------
     def _consts(self):
         prof = self.profile
@@ -116,20 +139,20 @@ class MHSLEnv:
         leak = jnp.asarray(prof.leak_value / prof.leak_value.max())
         fwd_cum = jnp.asarray(np.concatenate([[0.0], np.cumsum(prof.fwd_flops)]))
         bwd_cum = jnp.asarray(np.concatenate([[0.0], np.cumsum(prof.bwd_flops)]))
-        powers = jnp.asarray(self.net.power_levels)
-        return act_bits, grad_bits, leak, fwd_cum, bwd_cum, powers
+        return act_bits, grad_bits, leak, fwd_cum, bwd_cum
 
     # ---- reset ---------------------------------------------------------------
-    def reset(self, key) -> EnvState:
+    def reset(self, key, params: Optional[ScenarioParams] = None) -> EnvState:
+        sp = self._params(params)
         kp, _ = jax.random.split(key)
-        dev, eav = sample_positions(kp, self.net)
-        server = jnp.full((1, 2), self.net.area_m / 2.0)
+        dev, eav = sample_positions(kp, self.U, self.E, sp.area_m)
+        server = jnp.full((1, 2), 0.5) * sp.area_m
         dev_pos = jnp.concatenate([dev, server], axis=0)
         return EnvState(
             dev_pos=dev_pos,
             eav_pos=eav,
-            e_r=jnp.asarray(self.net.gamma_e),
-            t_r=jnp.asarray(self.net.gamma_t),
+            e_r=jnp.asarray(sp.gamma_e),
+            t_r=jnp.asarray(sp.gamma_t),
             assigned=jnp.zeros(self.U + 1, jnp.int32),
             stage_dev=jnp.full((self.S,), -1, jnp.int32),
             boundaries=jnp.zeros((self.S,), jnp.int32),
@@ -140,21 +163,24 @@ class MHSLEnv:
         )
 
     # ---- observation -----------------------------------------------------------
-    def observe(self, state: EnvState) -> Array:
+    def observe(self, state: EnvState,
+                params: Optional[ScenarioParams] = None) -> Array:
+        sp = self._params(params)
         v_idx = self._current_tx(state)
         v_onehot = jax.nn.one_hot(v_idx, self.U + 1)
         v_pos = state.dev_pos[v_idx]
-        l_m = jnp.linalg.norm(state.eav_pos - v_pos[None, :], axis=1) / self.net.area_m
-        if not self.know_eave_locations:
-            l_m = jnp.zeros_like(l_m)
-        l_d = jnp.linalg.norm(state.dev_pos - v_pos[None, :], axis=1) / self.net.area_m
+        l_m = jnp.linalg.norm(state.eav_pos - v_pos[None, :], axis=1) / sp.area_m
+        # blinded (know_eave_locations=0) and padded (eave_mask=0)
+        # eavesdroppers vanish from the observation
+        l_m = l_m * sp.know_eave_locations * sp.eave_mask
+        l_d = jnp.linalg.norm(state.dev_pos - v_pos[None, :], axis=1) / sp.area_m
         phase = (state.n > self.S).astype(jnp.float32)
         return jnp.concatenate(
             [
                 jnp.stack(
                     [
-                        state.e_r / self.net.gamma_e,
-                        state.t_r / self.net.gamma_t,
+                        state.e_r / sp.gamma_e,
+                        state.t_r / sp.gamma_t,
                         1.0 - state.layers_used / self.L,
                     ]
                 ),
@@ -211,8 +237,12 @@ class MHSLEnv:
         return jnp.where(idx < 0, self.U, idx).astype(jnp.int32)
 
     # ---- step ----------------------------------------------------------------
-    def step(self, state: EnvState, action: Dict[str, Array], key) -> Tuple[EnvState, Array, Array, Dict]:
-        act_bits, grad_bits, leak_v, fwd_cum, bwd_cum, powers = self._consts()
+    def step(self, state: EnvState, action: Dict[str, Array], key,
+             params: Optional[ScenarioParams] = None,
+             ) -> Tuple[EnvState, Array, Array, Dict]:
+        sp = self._params(params)
+        act_bits, grad_bits, leak_v, fwd_cum, bwd_cum = self._consts()
+        powers = sp.power_levels
         n = state.n
         S, U, L = self.S, self.U, self.L
 
@@ -278,7 +308,7 @@ class MHSLEnv:
         rx_pos = state.dev_pos[rx]
         d_tx_rx = jnp.linalg.norm(tx_pos - rx_pos) + 1e-6
         d_dec_rx = jnp.linalg.norm(state.dev_pos - rx_pos[None, :], axis=1)
-        rate = data_rate(p_tx, d_tx_rx, decoy_p, d_dec_rx, self.net)
+        rate = data_rate(p_tx, d_tx_rx, decoy_p, d_dec_rx, sp)
         t_hop = jnp.where(has_hop, tx_time(bits, rate), 0.0)
 
         # stage compute times (Eq. 20): on a forward hop the RECEIVING stage
@@ -294,13 +324,13 @@ class MHSLEnv:
         stage_flops = jnp.where(fwd_hop, stage_fwd_flops, stage_bwd_flops)
         t_comp = jnp.where(
             fwd_hop,
-            compute_time_fwd(stage_fwd_flops, self.net),
-            compute_time_bwd(stage_bwd_flops, self.net),
+            compute_time_fwd(stage_fwd_flops, sp, lam=sp.lambda_f),
+            compute_time_bwd(stage_bwd_flops, sp, lam=sp.lambda_b),
         )
         t_comp = jnp.where(has_hop, t_comp, 0.0)
         # energy (Eq. 11) charges the same direction-dependent FLOPs the
         # delay model does: fwd table on forward hops, bwd table on backward
-        e_comp = jnp.where(has_hop, compute_energy(stage_flops, self.net), 0.0)
+        e_comp = jnp.where(has_hop, compute_energy(stage_flops, sp), 0.0)
         e_hop = (p_tx + decoy_p.sum()) * t_hop + e_comp
 
         # ---- 3) leakage (Eqs. 12-13, 20-21) ----------------------------------
@@ -308,12 +338,15 @@ class MHSLEnv:
         decoy_dist_e = jnp.linalg.norm(
             state.dev_pos[:, None, :] - state.eav_pos[None, :, :], axis=-1
         )  # (U+1, E)
-        q_e = jnp.full((self.E,), self.net.monitor_prob)
-        delta = leak_v[boundary_layer] * self.leak_scale
+        # padded eavesdroppers (eave_mask=0) never monitor, so they leak
+        # nothing and (with the per-eavesdropper key folding in
+        # sample_leakage) leave the active ones' draws untouched
+        q_e = sp.monitor_prob * sp.eave_mask
+        delta = leak_v[boundary_layer] * sp.leak_scale
         leak = jnp.where(
             has_hop,
             sample_leakage(
-                key, p_tx, d_tx_e, decoy_p, decoy_dist_e, q_e, delta, self.net.rayleigh_o
+                key, p_tx, d_tx_e, decoy_p, decoy_dist_e, q_e, delta, sp.rayleigh_o
             ),
             0.0,
         )

@@ -59,22 +59,35 @@ def sample_leakage(
     decoy_dist_e: Array,
     q_e: Array,
     delta: Array,
-    o: float = 1.0,
+    o=1.0,
 ) -> Array:
     """Monte-Carlo single-draw leakage (Eqs. 12-13, 20-21): sample Rayleigh
-    SNRs, pick the argmax per eavesdropper, sample the monitoring Bernoulli."""
-    ke, kq = jax.random.split(key)
+    SNRs, pick the argmax per eavesdropper, sample the monitoring Bernoulli.
+
+    The PRNG key is folded per eavesdropper INDEX, so each eavesdropper's
+    draw depends only on its own slot: extending the eavesdropper axis with
+    padded entries (``q_e`` masked to 0) leaves the active eavesdroppers'
+    samples bit-identical to a smaller-E environment. This is what makes
+    the padded-E scenario sweep (``ScenarioParams.eave_mask``) exactly
+    equivalent to re-instantiating a smaller env.
+    """
     e = dist_tx_e.shape[0]
-    u = decoy_p.shape[0]
-    # Rayleigh power ~ Exponential(mean = p h): sample via -mean*log(U)
-    un = jax.random.uniform(ke, (u + 1, e), minval=1e-12, maxval=1.0)
     mean_tx = p_tx * channel_gain(dist_tx_e, o)  # (E,)
     mean_d = decoy_p[:, None] * channel_gain(decoy_dist_e, o)  # (U, E)
     means = jnp.concatenate([mean_tx[None, :], mean_d], axis=0)  # (U+1, E)
-    snr = -means * jnp.log(un)
-    captured = jnp.argmax(snr, axis=0) == 0  # (E,) trainer had max SNR
-    monitored = jax.random.uniform(kq, (e,)) < q_e
-    return jnp.sum(captured & monitored) * delta
+
+    def one_eave(ke, mean_col, q):
+        ks, km = jax.random.split(ke)
+        # Rayleigh power ~ Exponential(mean = p h): sample via -mean*log(U)
+        un = jax.random.uniform(ks, mean_col.shape, minval=1e-12, maxval=1.0)
+        snr = -mean_col * jnp.log(un)
+        captured = jnp.argmax(snr) == 0  # trainer had max SNR
+        monitored = jax.random.uniform(km) < q
+        return captured & monitored
+
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, jnp.arange(e))
+    hits = jax.vmap(one_eave)(keys, means.T, q_e)
+    return jnp.sum(hits) * delta
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +107,13 @@ def optimal_powers_single_decoy(
 
     xi_0 p_s - xi_d p_d = chi_1 (rate constraint tight)
     p_s + p_d = chi_2 = B_E / B_T (energy tight)
+
+    When the energy budget is tight (xi_0 chi_2 < chi_1) the unclamped
+    interior solution would assign the decoy NEGATIVE power; physical
+    powers are non-negative, so the decoy is clamped to 0 and the whole
+    budget goes to the trainer (the rate constraint is then best-effort
+    infeasible either way). The energy identity p_s + p_d = chi_2 holds
+    in both regimes.
     """
     o = net.rayleigh_o
     snr_req = 2.0 ** (bits / (b_t * net.bandwidth_hz)) - 1.0
@@ -101,8 +121,9 @@ def optimal_powers_single_decoy(
     xid = (o / dist_tx_decoy**2) * snr_req
     chi1 = net.noise_w * snr_req
     chi2 = b_e / b_t
-    p_s = (chi1 + xid * chi2) / (xi0 + xid)
-    p_d = (xi0 * chi2 - chi1) / (xi0 + xid)
+    p_d = jnp.maximum((xi0 * chi2 - chi1) / (xi0 + xid), 0.0)
+    # equals (chi1 + xid*chi2)/(xi0 + xid) in the interior regime
+    p_s = chi2 - p_d
     return p_s, p_d
 
 
@@ -115,15 +136,21 @@ def optimal_powers_single_eave(
     net: NetworkConfig,
 ) -> Tuple[Array, Array]:
     """Corollary 2 (|E|=1, decoy interference at the receiver ignored):
-    returns (p_s*, p_d* (D,))."""
+    returns (p_s*, p_d* (D,)).
+
+    Clamped to physical powers: if the rate constraint alone demands more
+    than the whole energy budget (chi_1/xi_0 > chi_2) the trainer gets the
+    full budget and the decoys 0, instead of the unclamped solution's
+    negative decoy powers.
+    """
     o = net.rayleigh_o
     snr_req = 2.0 ** (bits / (b_t * net.bandwidth_hz)) - 1.0
     xi0 = o / dist_tx_rx**2
     chi1 = net.noise_w * snr_req
     chi2 = b_e / b_t
-    p_s = chi1 / xi0
+    p_s = jnp.minimum(chi1 / xi0, chi2)
     # water-levelling: equalize p_d m_{d,e}^-2 across decoys (Eq. 47-50)
-    budget = chi2 - p_s
+    budget = jnp.maximum(chi2 - p_s, 0.0)
     denom = jnp.sum(decoy_dist_e**2)
     p_d = budget * decoy_dist_e**2 / jnp.maximum(denom, 1e-30)
     return p_s, p_d

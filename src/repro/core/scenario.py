@@ -1,0 +1,386 @@
+"""Scenario parameters as a runtime pytree + scenario-batched train/eval.
+
+The seed froze every physics constant (``NetworkConfig`` fields,
+``monitor_prob``, ``power_levels``, budgets, ``leak_scale``) into jit
+closures, so each point of the paper's sweeps (Figs. 5/6/8) paid a full
+recompile and the scenario axis could not ride the vectorized rollout
+engine. This module splits the env configuration into
+
+* **static structure** - shapes only: U devices, E_max eavesdroppers,
+  S stages, NBINS size bins, number of power levels. These stay on
+  ``MHSLEnv`` and fix every array shape.
+* **dynamic physics** - ``ScenarioParams``, a pytree of jnp scalars /
+  small vectors passed as a *runtime argument* through
+  ``channel -> leakage -> env -> rollout -> trainers``. One compiled
+  train/eval step serves every sweep point; sweeping is just calling the
+  same compiled function with different leaf values, or vmapping over a
+  stacked scenario batch.
+
+Sweep axes that change a SHAPE (more devices, more stages) still require
+a new env; eavesdropper count specifically does NOT - pad to ``E_max``
+and vary ``eave_mask`` (Fig. 6's sweep runs in one padded env).
+
+Composition with ``num_envs``: the scenario axis vmaps OUTSIDE the env
+population, giving ``(num_scenarios, num_envs, T, ...)`` trajectories
+from a single jitted call (``make_population_rollout`` /
+``make_population_evaluator``), and ``train_population`` trains one agent
+per scenario in lockstep on device.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import NetworkConfig
+
+Array = jax.Array
+
+
+class ScenarioParams(NamedTuple):
+    """Dynamic physics of one MHSL scenario (all leaves are jnp arrays).
+
+    Every field is a runtime value: changing any of them re-uses the
+    existing jit cache. Vector fields are sized by the env's static
+    shapes (``E_max`` eavesdroppers, ``P`` power levels).
+    """
+
+    monitor_prob: Array  # (E,) per-eavesdropper q_e
+    eave_mask: Array  # (E,) 1.0 = active, 0.0 = padded-out eavesdropper
+    know_eave_locations: Array  # () 1.0 = l_M observed, 0.0 = blinded
+    gamma_t: Array  # () per-iteration delay budget (s)
+    gamma_e: Array  # () per-iteration energy budget (J)
+    bandwidth_hz: Array  # () B
+    noise_w: Array  # () N0 * B in watts
+    rayleigh_o: Array  # () o
+    power_levels: Array  # (P,) discrete transmit powers (W)
+    leak_scale: Array  # () leakage reward scale
+    area_m: Array  # () deployment area side length
+    f_cpu_hz: Array  # () f^B device CPU clock
+    theta_chip: Array  # () vartheta chip energy coefficient
+    lambda_f: Array  # () Eq. 8 complexity multiplier (seed applied 1.0)
+    lambda_b: Array  # () Eq. 9 complexity multiplier (seed applied 1.0)
+
+    @property
+    def num_eaves(self) -> int:
+        return self.monitor_prob.shape[-1]
+
+    @property
+    def num_power_levels(self) -> int:
+        return self.power_levels.shape[-1]
+
+
+def scenario_from_net(
+    net: NetworkConfig,
+    *,
+    know_eave_locations: bool = True,
+    leak_scale: float = 1.0,
+) -> ScenarioParams:
+    """Build the dynamic-physics pytree matching a Table-I config.
+
+    ``lambda_f``/``lambda_b`` default to 1.0: the seed env never threaded
+    ``NetworkConfig.lambda_f`` into Eqs. 8-9 (faithfulness ledger), and
+    this constructor preserves that behaviour exactly. Sweeps can set
+    them explicitly via ``scenario_grid``.
+    """
+    e = net.num_eaves
+    return ScenarioParams(
+        monitor_prob=jnp.full((e,), net.monitor_prob, jnp.float32),
+        eave_mask=jnp.ones((e,), jnp.float32),
+        know_eave_locations=jnp.asarray(1.0 if know_eave_locations else 0.0),
+        gamma_t=jnp.asarray(net.gamma_t),
+        gamma_e=jnp.asarray(net.gamma_e),
+        bandwidth_hz=jnp.asarray(net.bandwidth_hz),
+        noise_w=jnp.asarray(net.noise_w),
+        rayleigh_o=jnp.asarray(net.rayleigh_o),
+        power_levels=jnp.asarray(net.power_levels),
+        leak_scale=jnp.asarray(leak_scale),
+        area_m=jnp.asarray(net.area_m),
+        f_cpu_hz=jnp.asarray(net.f_cpu_hz),
+        theta_chip=jnp.asarray(net.theta_chip),
+        lambda_f=jnp.asarray(1.0),
+        lambda_b=jnp.asarray(1.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# grid construction + stacking
+# ---------------------------------------------------------------------------
+
+
+def replace_param(base: ScenarioParams, name: str, value) -> ScenarioParams:
+    """``_replace`` one field, broadcasting scalars to the field's shape
+    (e.g. ``monitor_prob=0.3`` -> ``full((E,), 0.3)``)."""
+    ref = getattr(base, name)
+    val = jnp.broadcast_to(jnp.asarray(value, ref.dtype), ref.shape)
+    return base._replace(**{name: val})
+
+
+def with_active_eaves(base: ScenarioParams, count: int) -> ScenarioParams:
+    """Scenario with only the first ``count`` eavesdroppers active: their
+    mask is 1, the rest are padding (zero monitoring, zero observation)."""
+    e = base.num_eaves
+    if not 0 <= count <= e:
+        raise ValueError(f"count must be in [0, {e}], got {count}")
+    mask = (jnp.arange(e) < count).astype(base.eave_mask.dtype)
+    return base._replace(eave_mask=mask)
+
+
+def scenario_grid(base: ScenarioParams, **axes: Sequence) -> List[ScenarioParams]:
+    """Cartesian product over named parameter axes.
+
+    ``scenario_grid(base, monitor_prob=[0.3, 0.6], gamma_e=[50.0, 75.0])``
+    yields 4 scenarios in row-major order of the keyword arguments. The
+    special axis ``active_eaves`` takes integer counts and varies
+    ``eave_mask`` (padded-E sweep).
+    """
+    names = list(axes)
+    out = []
+    for combo in itertools.product(*(axes[n] for n in names)):
+        sp = base
+        for name, value in zip(names, combo):
+            if name == "active_eaves":
+                sp = with_active_eaves(sp, int(value))
+            else:
+                sp = replace_param(sp, name, value)
+        out.append(sp)
+    return out
+
+
+def stack_scenarios(scenarios: Sequence[ScenarioParams]) -> ScenarioParams:
+    """Stack N scenarios into one batched pytree (leading axis N) ready
+    for the population vmap."""
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+
+
+def num_scenarios(stacked: ScenarioParams) -> int:
+    return int(stacked.monitor_prob.shape[0])
+
+
+def jit_cache_size(fn) -> int:
+    """Compiled-variant count of an engine callable (recompile auditing).
+
+    Accepts either a jitted function or one of this module's /
+    ``rollout``'s wrappers (which expose their inner jit as ``.jitted``).
+    """
+    inner = getattr(fn, "jitted", fn)
+    return inner._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# population rollout / evaluation: scenario axis composed with num_envs
+# ---------------------------------------------------------------------------
+
+
+def make_population_rollout(env, policy, hist_len: int, *,
+                            share_params: bool = True,
+                            extra_record=None):
+    """Rollout vmapped over scenarios x envs in one jitted call.
+
+    Returns ``run(params, rkeys, akeys, scenarios)`` where ``rkeys`` /
+    ``akeys`` are ``(num_envs,)`` key batches shared across scenarios
+    (controlled comparison: every sweep point replays the same episode
+    draws), ``scenarios`` is a stacked ``ScenarioParams`` with leading
+    axis N, and trajectory leaves come back ``(N, num_envs, T, ...)``.
+    ``share_params=False`` maps ``params`` over the scenario axis too
+    (one agent per scenario, as produced by ``train_population``).
+
+    The wrapper exposes ``run.jitted`` (for ``jit_cache_size``) and
+    ``run.trace_count`` (a 1-element list bumped on every retrace).
+    """
+    from repro.core.agents import rollout as R
+
+    one = R.make_episode_rollout(env, policy, hist_len,
+                                 extra_record=extra_record)
+    trace_count = [0]
+
+    def _per_scenario(params, rkeys, akeys, sp):
+        trace_count[0] += 1  # executes only while tracing
+        st0 = jax.vmap(env.reset, in_axes=(0, None))(rkeys, sp)
+        return jax.vmap(one, in_axes=(None, 0, 0, None))(
+            params, st0, akeys, sp
+        )
+
+    jitted = jax.jit(jax.vmap(
+        _per_scenario,
+        in_axes=(None if share_params else 0, None, None, 0),
+    ))
+
+    def run(params, rkeys, akeys, scenarios):
+        return jitted(params, rkeys, akeys, scenarios)
+
+    run.jitted = jitted
+    run.trace_count = trace_count
+    return run
+
+
+def make_population_evaluator(env, policy, hist_len: int = 1, *,
+                              share_params: bool = True):
+    """One compiled eval step for a whole scenario sweep.
+
+    Returns ``evaluate(params, rkeys, akeys, scenarios)`` ->
+    ``{"reward", "leak", "viol"}``, each ``(N,)``: per-scenario means
+    over the episode batch of per-episode sums. A 5-point
+    ``monitor_prob`` grid (or any other parameter grid of the same
+    shapes) compiles this exactly once.
+    """
+    from repro.core.agents import rollout as R
+
+    one = R.make_episode_rollout(env, policy, hist_len)
+    trace_count = [0]
+
+    def _per_scenario(params, rkeys, akeys, sp):
+        trace_count[0] += 1
+        st0 = jax.vmap(env.reset, in_axes=(0, None))(rkeys, sp)
+        _, traj = jax.vmap(one, in_axes=(None, 0, 0, None))(
+            params, st0, akeys, sp
+        )
+        return {
+            "reward": traj["reward"].sum(axis=-1).mean(),
+            "leak": traj["leak"].sum(axis=-1).mean(),
+            "viol": traj["viol"].sum(axis=-1).mean(),
+        }
+
+    jitted = jax.jit(jax.vmap(
+        _per_scenario,
+        in_axes=(None if share_params else 0, None, None, 0),
+    ))
+
+    def evaluate(params, rkeys, akeys, scenarios):
+        return jitted(params, rkeys, akeys, scenarios)
+
+    evaluate.jitted = jitted
+    evaluate.trace_count = trace_count
+    return evaluate
+
+
+def evaluate_population(env, policy, params, scenarios, *,
+                        episodes: int = 20, seed: int = 1000,
+                        hist_len: int = 1, share_params: bool = True
+                        ) -> Dict[str, np.ndarray]:
+    """Evaluate ``params`` across a stacked scenario batch in ONE jitted
+    call (fresh geometry per episode, same episode keys per scenario).
+
+    Key derivation mirrors ``loops.evaluate_sac`` so a batch-of-1 sweep
+    reproduces the single-scenario evaluation numbers.
+    """
+    ev = make_population_evaluator(env, policy, hist_len,
+                                   share_params=share_params)
+    key = jax.random.PRNGKey(seed)
+    k_reset, k_act = jax.random.split(key)
+    out = ev(params, jax.random.split(k_reset, episodes),
+             jax.random.split(k_act, episodes), scenarios)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# population training: one SAC agent per scenario, trained in lockstep
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PopulationResult:
+    """Per-scenario training curves + the stacked parameter pytree
+    (leading axis = scenario)."""
+
+    results: List[Any] = field(default_factory=list)  # List[TrainResult]
+    params: Any = None
+
+
+def _stack_like(tree, n: int):
+    """Zero-initialized copy of ``tree`` with a new leading axis n."""
+    return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), tree)
+
+
+def train_population(env, cfg, scenarios: ScenarioParams, *,
+                     episodes: int = 200, seed: int = 0,
+                     warmup_episodes: int = 10, num_envs: int = 1,
+                     resample_positions: bool = False) -> PopulationResult:
+    """Train one ICM-CA SAC agent per scenario, all scenarios in lockstep.
+
+    The whole chunk cycle - vmapped rollout over ``(N, num_envs)``,
+    batched replay writes into N stacked device buffers, N fused update
+    scans - runs under single jitted calls with the scenario axis mapped
+    by ``jax.vmap``; nothing recompiles across scenarios. Chunking,
+    warmup rounding, and metric bookkeeping match ``loops.train_sac``
+    (every scenario shares the chunk schedule, reset keys, and action
+    keys, so sweep points differ only by their physics).
+    """
+    from repro.core.agents import rollout as R
+    from repro.core.agents import sac as SAC
+    from repro.core.agents.loops import (
+        TrainResult, _chunk_metrics, _sac_example, _SAC_FIELDS,
+    )
+
+    if num_envs < 1:
+        raise ValueError(f"num_envs must be >= 1, got {num_envs}")
+    n = num_scenarios(scenarios)
+    adims = env.action_dims
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    params = jax.vmap(
+        lambda k: SAC.init_agent(k, env.obs_dim, adims, cfg)
+    )(jax.random.split(k0, n))
+    update, init_opt = SAC.make_update(adims, cfg)
+    opt_state = jax.vmap(init_opt)(params)
+
+    buf = _stack_like(R.buffer_init(cfg.buffer_size, _sac_example(env, cfg)), n)
+    # donate the stacked buffer storage where XLA supports it (same
+    # rationale as rollout.buffer_add: in-place ring writes on
+    # accelerators, no donation on CPU where it is unimplemented)
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    vm_add = jax.jit(jax.vmap(R._buffer_add), donate_argnums=donate)
+    rollout_uniform = make_population_rollout(
+        env, R.uniform_policy(adims), cfg.hist_len, share_params=False)
+    rollout_actor = make_population_rollout(
+        env, R.sac_policy(adims, cfg), cfg.hist_len, share_params=False)
+    n_updates = cfg.updates_per_step * env.episode_len * num_envs
+    fused = R.make_fused_update(update, cfg.batch, n_updates)
+    vm_fused = jax.jit(jax.vmap(fused))
+
+    def _flatten(traj):
+        sub = {k: traj[k] for k in _SAC_FIELDS}
+        return jax.tree.map(
+            lambda x: x.reshape((n, x.shape[1] * x.shape[2]) + x.shape[3:]),
+            sub,
+        )
+
+    pop = PopulationResult(results=[TrainResult() for _ in range(n)])
+    seen: List[set] = [set() for _ in range(n)]
+    key, reset_key = jax.random.split(key)
+
+    ep = 0
+    while ep < episodes:
+        if resample_positions:
+            key, reset_key = jax.random.split(key)
+        rkeys = R.episode_reset_keys(reset_key, num_envs, resample_positions)
+        key, ksub = jax.random.split(key)
+        akeys = jax.random.split(ksub, num_envs)
+
+        rollout = rollout_uniform if ep < warmup_episodes else rollout_actor
+        _, traj = rollout(params, rkeys, akeys, scenarios)
+
+        buf = vm_add(buf, _flatten(traj))
+        # one device->host transfer for all scenarios, then the standard
+        # per-episode bookkeeping on each scenario's numpy slice
+        host = jax.device_get({k: traj[k] for k in ("obs", "reward", "leak",
+                                                    "viol")})
+        for s in range(n):
+            _chunk_metrics(pop.results[s], seen[s],
+                           {k: host[k][s] for k in host},
+                           ep, episodes, num_envs)
+
+        if ep >= warmup_episodes and int(buf.size[0]) >= cfg.batch:
+            key, ku = jax.random.split(key)
+            params, opt_state, _ = vm_fused(params, opt_state, buf,
+                                            jax.random.split(ku, n))
+        ep += num_envs
+
+    pop.params = params
+    return pop
