@@ -5,6 +5,7 @@ import json
 import os
 import time
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -14,37 +15,84 @@ OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 @dataclass(frozen=True)
 class BenchConfig:
     quick: bool = True
+    # CI smoke mode (benchmarks/run.py --smoke): tiny episode/step counts so
+    # the figure scripts execute end-to-end in minutes on CPU, and NO
+    # baseline JSON writes (the numbers are meaningless for tracking).
+    smoke: bool = False
     # vmapped env population per training chunk (rollout engine). 1 keeps
     # the seed's episode ordering and updates-per-env-step ratio (updates
     # are batched at chunk end either way - see train_sac's docstring);
     # raise it, e.g. BenchConfig(num_envs=8), to trade per-episode update
     # freshness for wall-clock. Metrics stay per-episode regardless.
     num_envs: int = 1
+    # shard the population axis of SAC training over this many host devices
+    # (None = no mesh, plain vmap). Threaded into train_sac/train_population
+    # by train_standard_agents and the fig benchmarks.
+    shard_devices: Optional[int] = None
+    # stop/resume knobs threaded into the SAC trainers: each trained agent
+    # checkpoints under {checkpoint_dir}/{algo} every checkpoint_every
+    # episodes and resumes from an existing checkpoint by default.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
 
     @property
     def episodes(self) -> int:
+        if self.smoke:
+            return 8
         return 160 if self.quick else 400
 
     @property
     def warmup(self) -> int:
+        if self.smoke:
+            return 2
         return 15 if self.quick else 30
 
     @property
     def eval_episodes(self) -> int:
+        if self.smoke:
+            return 4
         return 15 if self.quick else 50
+
+    def mesh(self):
+        """Population mesh for the configured device count (None = no mesh)."""
+        if self.shard_devices is None:
+            return None
+        from repro.launch.mesh import make_population_mesh
+
+        return make_population_mesh(self.shard_devices)
+
+    def ckpt(self, name: str):
+        """Per-agent checkpoint subdirectory (None when checkpointing off)."""
+        if self.checkpoint_dir is None:
+            return None
+        return os.path.join(self.checkpoint_dir, name)
+
+
+def derived_seed(seed: int, idx: int) -> int:
+    """Per-variant seed for multi-variant benchmarks: distinct streams so
+    ablation deltas aren't correlated-noise artifacts, deterministic in the
+    base seed so default runs stay reproducible. idx 0 keeps ``seed``."""
+    return seed + 7919 * idx  # 7919: prime stride, no overlap for idx < stride
 
 
 def train_standard_agents(env, bench: BenchConfig, seed: int = 0, *,
                           episodes: int | None = None,
                           warmup: int | None = None,
                           algos=("icm_ca", "sac", "ppo"),
-                          scenario=None, num_envs: int | None = None):
+                          scenario=None, num_envs: int | None = None,
+                          ckpt_ns: str | None = None):
     """The agent-training preamble shared by fig4/fig5/fig6.
 
     Trains the requested algorithms on ``env`` (optionally under a
     ``ScenarioParams`` override) and returns
     ``{name: {"params", "cfg", "result", "seconds"}}``. Algorithms:
     ``icm_ca`` (full SAC), ``sac`` (no ICM/CA ablation), ``ppo``, ``dqn``.
+
+    ``ckpt_ns`` namespaces this call's checkpoints under
+    ``bench.checkpoint_dir`` (e.g. ``"fig4"``): different figures train
+    agents with the same names, so checkpointing is OFF unless the caller
+    provides a namespace - resuming another figure's agent would silently
+    return its curves.
     """
     from repro.core.agents.dqn import DQNConfig, train_dqn
     from repro.core.agents.loops import train_sac
@@ -54,6 +102,13 @@ def train_standard_agents(env, bench: BenchConfig, seed: int = 0, *,
     episodes = bench.episodes if episodes is None else episodes
     warmup = bench.warmup if warmup is None else warmup
     num_envs = bench.num_envs if num_envs is None else num_envs
+    # mesh + resume knobs ride on the SAC trainer (the engine's mesh-aware
+    # path); PPO/DQN have no population/mesh trainer yet
+    mesh = bench.mesh()
+
+    def ck(name):
+        return bench.ckpt(f"{ckpt_ns}/{name}") if ckpt_ns else None
+
     out = {}
     for name in algos:
         with Timer() as t:
@@ -61,12 +116,16 @@ def train_standard_agents(env, bench: BenchConfig, seed: int = 0, *,
                 cfg = SACConfig()
                 res = train_sac(env, cfg, episodes=episodes,
                                 warmup_episodes=warmup, seed=seed,
-                                num_envs=num_envs, scenario=scenario)
+                                num_envs=num_envs, scenario=scenario,
+                                mesh=mesh, checkpoint_dir=ck(name),
+                                checkpoint_every=bench.checkpoint_every)
             elif name == "sac":
                 cfg = SACConfig(use_icm=False, use_ca=False)
                 res = train_sac(env, cfg, episodes=episodes,
                                 warmup_episodes=warmup, seed=seed,
-                                num_envs=num_envs, scenario=scenario)
+                                num_envs=num_envs, scenario=scenario,
+                                mesh=mesh, checkpoint_dir=ck(name),
+                                checkpoint_every=bench.checkpoint_every)
             elif name == "ppo":
                 cfg = PPOConfig()
                 res = train_ppo(env, cfg, episodes=episodes, seed=seed,

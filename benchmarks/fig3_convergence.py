@@ -7,7 +7,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import BenchConfig, Timer, emit_csv_row, episodes_to_reach, save_json
+from benchmarks.common import (
+    BenchConfig, Timer, derived_seed, emit_csv_row, episodes_to_reach,
+    save_json,
+)
 from repro.core.agents.loops import train_sac
 from repro.core.agents.sac import SACConfig
 from repro.core.env import MHSLEnv
@@ -23,12 +26,18 @@ VARIANTS = {
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
     curves = {}
-    for name, flags in VARIANTS.items():
+    # each variant trains on its own derived seed (identical seeds would
+    # correlate the init/exploration noise across the ablation arms, making
+    # the deltas partly artifacts of one shared draw)
+    for i, (name, flags) in enumerate(VARIANTS.items()):
         cfg = SACConfig(**flags)
         with Timer() as t:
             res = train_sac(env, cfg, episodes=bench.episodes,
-                            warmup_episodes=bench.warmup, seed=seed,
-                            num_envs=bench.num_envs)
+                            warmup_episodes=bench.warmup,
+                            seed=derived_seed(seed, i),
+                            num_envs=bench.num_envs, mesh=bench.mesh(),
+                            checkpoint_dir=bench.ckpt(f"fig3/{name}"),
+                            checkpoint_every=bench.checkpoint_every)
         curves[name] = {
             "reward": res.episode_reward,
             "leak": res.episode_leak,

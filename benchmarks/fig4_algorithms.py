@@ -18,7 +18,8 @@ from repro.core.profiles import resnet101_profile
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
     agents = train_standard_agents(env, bench, seed,
-                                   algos=("icm_ca", "ppo", "dqn"))
+                                   algos=("icm_ca", "ppo", "dqn"),
+                                   ckpt_ns="fig4")
     curves = {
         name: {"reward": a["result"].episode_reward,
                "leak": a["result"].episode_leak,

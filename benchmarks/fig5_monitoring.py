@@ -32,7 +32,8 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     adims = env.action_dims
 
     agents = train_standard_agents(env, bench, seed,
-                                   algos=("icm_ca", "sac", "ppo"))
+                                   algos=("icm_ca", "sac", "ppo"),
+                                   ckpt_ns="fig5")
     scenarios = stack_scenarios(scenario_grid(env.scenario(), monitor_prob=QS))
 
     leak = {}

@@ -38,7 +38,9 @@ E_MAX = 4
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     prof = resnet101_profile(batch=1)
     env = MHSLEnv(profile=prof, net=replace(NetworkConfig(), num_eaves=E_MAX))
-    episodes = max(bench.episodes // 2, 40)
+    # smoke mode keeps the tiny count - flooring it back to 40 would defeat
+    # the CI rot-detector's minutes-on-CPU contract
+    episodes = bench.episodes if bench.smoke else max(bench.episodes // 2, 40)
     scens = scenario_grid(env.scenario(), active_eaves=ES)
     stacked = stack_scenarios(scens)
 
@@ -48,11 +50,15 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     pops = {
         "icm_ca": train_population(
             env, SACConfig(), stacked, episodes=episodes,
-            warmup_episodes=bench.warmup, seed=seed, num_envs=bench.num_envs),
+            warmup_episodes=bench.warmup, seed=seed, num_envs=bench.num_envs,
+            mesh=bench.mesh(), checkpoint_dir=bench.ckpt("fig6/icm_ca"),
+            checkpoint_every=bench.checkpoint_every),
         "sac": train_population(
             env, SACConfig(use_icm=False, use_ca=False), stacked,
             episodes=episodes, warmup_episodes=bench.warmup, seed=seed,
-            num_envs=bench.num_envs),
+            num_envs=bench.num_envs, mesh=bench.mesh(),
+            checkpoint_dir=bench.ckpt("fig6/sac"),
+            checkpoint_every=bench.checkpoint_every),
     }
     rows = {e: {name: last10(pop.results[i]) for name, pop in pops.items()}
             for i, e in enumerate(ES)}

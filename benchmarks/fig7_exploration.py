@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import BenchConfig, emit_csv_row, save_json
+from benchmarks.common import BenchConfig, derived_seed, emit_csv_row, save_json
 from repro.core.agents.loops import train_sac
 from repro.core.agents.sac import SACConfig
 from repro.core.env import MHSLEnv
@@ -15,12 +15,16 @@ from repro.core.profiles import resnet101_profile
 
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
+    # distinct derived seeds per variant: a shared seed would correlate the
+    # exploration noise between the two arms of the comparison
     res_full = train_sac(env, SACConfig(), episodes=bench.episodes,
-                         warmup_episodes=bench.warmup, seed=seed,
-                         num_envs=bench.num_envs)
+                         warmup_episodes=bench.warmup,
+                         seed=derived_seed(seed, 0),
+                         num_envs=bench.num_envs, mesh=bench.mesh())
     res_sac = train_sac(env, SACConfig(use_icm=False, use_ca=False),
                         episodes=bench.episodes, warmup_episodes=bench.warmup,
-                        seed=seed, num_envs=bench.num_envs)
+                        seed=derived_seed(seed, 1), num_envs=bench.num_envs,
+                        mesh=bench.mesh())
     at = min(bench.warmup + 20, len(res_full.states_explored) - 1)
     ratio = res_full.states_explored[at] / max(res_sac.states_explored[at], 1)
     derived = {

@@ -27,7 +27,9 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     )
     pop = train_population(env, SACConfig(), scens, episodes=bench.episodes,
                            warmup_episodes=bench.warmup, seed=seed,
-                           num_envs=bench.num_envs)
+                           num_envs=bench.num_envs, mesh=bench.mesh(),
+                           checkpoint_dir=bench.ckpt("fig8/pop"),
+                           checkpoint_every=bench.checkpoint_every)
     res_known, res_blind = pop.results
     known = float(np.mean(res_known.episode_reward[-10:]))
     blind = float(np.mean(res_blind.episode_reward[-10:]))

@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract) and saves
 full curves/tables under experiments/bench/.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5] [--full]
+
+``--smoke`` is the CI rot-detector mode: tiny episode/step counts so the
+figure scripts execute end-to-end on CPU in minutes, with NO baseline
+JSON writes (the CSV + per-run OUT_DIR artifacts are still emitted and
+uploaded by the workflow).
 """
 from __future__ import annotations
 
@@ -31,10 +36,14 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated benchmark names")
     ap.add_argument("--full", action="store_true", help="paper-scale episode counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny counts, no baseline JSON writes")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    bench = BenchConfig(quick=not args.full)
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
+    bench = BenchConfig(quick=not args.full, smoke=args.smoke)
     names = ALL if not args.only else [
         n for n in ALL if any(n.startswith(o.strip()) for o in args.only.split(","))
     ]

@@ -10,18 +10,29 @@ Measures, with the SAME ``SACConfig`` on the current backend:
   seed's per-point loop (fresh env + fresh jits per point, one recompile
   each) vs one stacked-``ScenarioParams`` call through the population
   evaluator (compiles exactly once). Acceptance: >=3x wall-clock.
+* ``sharded_population`` - the mesh-sharded population path: a
+  scenarios x envs rollout on a multi-device population mesh
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=4`` in a clean
+  subprocess, so the measurement is independent of the parent's device
+  count) vs the same population on one device. Records env-steps/sec for
+  both; on forced CPU host devices the "speedup" only tracks XLA's
+  thread partitioning, so it is reported, not gated.
 
 Emits the scaffold CSV rows, saves each run's numbers to the bench OUT_DIR,
 and records the baseline in ``BENCH_throughput.json`` at the repo root so
 later PRs can track the performance trajectory. The baseline is
 write-once - an existing file is never clobbered by routine benchmark runs
-(set ``BENCH_THROUGHPUT_REFRESH=1`` to re-baseline deliberately).
+(set ``BENCH_THROUGHPUT_REFRESH=1`` to re-baseline deliberately), but a
+newly added metric is backfilled the first time it is measured. Smoke runs
+(``--smoke``) never touch the baseline.
 Acceptance for the engine PR: >=5x env-steps/sec.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -179,6 +190,85 @@ def _time_scenario_sweep(env, params, cfg, episodes: int, key):
     }
 
 
+SHARDED_DEVICES = 4
+
+# Runs in a clean subprocess with a forced host device count (the parent
+# process has already initialized its backend, typically with 1 device).
+# Measures the SAME population rollout twice: default single-device
+# placement vs sharded over a population mesh spanning every device.
+_SHARDED_SNIPPET = """
+import json, time
+import jax
+from repro.core.agents import rollout as R
+from repro.core.agents import sac as SAC
+from repro.core.env import MHSLEnv
+from repro.core.profiles import resnet101_profile
+from repro.core.scenario import (
+    make_population_rollout, scenario_grid, stack_scenarios,
+)
+from repro.distribution import population as PD
+from repro.launch.mesh import make_population_mesh
+
+N, NUM_ENVS, CHUNKS = {n}, {num_envs}, {chunks}
+env = MHSLEnv(profile=resnet101_profile(batch=1))
+cfg = SAC.SACConfig()
+key = jax.random.PRNGKey(0)
+key, k0, kr, ka = jax.random.split(key, 4)
+params = SAC.init_agent(k0, env.obs_dim, env.action_dims, cfg)
+rollout = make_population_rollout(env, R.sac_policy(env.action_dims, cfg),
+                                  cfg.hist_len)
+scens = stack_scenarios(scenario_grid(
+    env.scenario(), monitor_prob=[0.3 + 0.6 * i / (N - 1) for i in range(N)]))
+rkeys = jax.random.split(kr, NUM_ENVS)
+akeys = jax.random.split(ka, NUM_ENVS)
+
+
+def measure(params, rkeys, akeys, scens):
+    jax.block_until_ready(rollout(params, rkeys, akeys, scens))  # compile
+    t0 = time.perf_counter()
+    for _ in range(CHUNKS):
+        _, traj = rollout(params, rkeys, akeys, scens)
+    jax.block_until_ready(traj["reward"])
+    return CHUNKS * N * NUM_ENVS * env.episode_len / (time.perf_counter() - t0)
+
+
+single_sps = measure(params, rkeys, akeys, scens)
+mesh = make_population_mesh()
+sharded_sps = measure(
+    PD.replicate(params, mesh), PD.replicate(rkeys, mesh),
+    PD.replicate(akeys, mesh), PD.shard_population(scens, mesh, N))
+print("RESULT " + json.dumps({{
+    "devices": len(jax.devices()), "scenarios": N, "num_envs": NUM_ENVS,
+    "episode_len": env.episode_len,
+    "env_steps_per_sec": {{"single_device": single_sps,
+                           "sharded": sharded_sps}},
+    "sharded_speedup": sharded_sps / single_sps,
+}}))
+"""
+
+
+def _time_sharded_population(bench: BenchConfig):
+    """Sharded-population rollout throughput on a forced multi-device host."""
+    # scenarios must divide SHARDED_DEVICES even in smoke mode, else the
+    # placement falls back to replication and the sharded path goes untested
+    n, num_envs = (4, 4) if bench.smoke else (4, 8)
+    chunks = 2 if bench.smoke else (6 if bench.quick else 20)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={SHARDED_DEVICES}"
+    )
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    code = _SHARDED_SNIPPET.format(n=n, num_envs=num_envs, chunks=chunks)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1200, env=env, cwd=REPO_ROOT)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded-population subprocess failed:\n{out.stderr[-3000:]}"
+        )
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
     cfg = SAC.SACConfig()
@@ -188,9 +278,9 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     update, init_opt = SAC.make_update(env.action_dims, cfg)
     opt_state = init_opt(params)
 
-    legacy_eps = 20 if bench.quick else 60
-    engine_chunks = 20 if bench.quick else 60
-    n_updates = 50 if bench.quick else 200
+    legacy_eps = 3 if bench.smoke else (20 if bench.quick else 60)
+    engine_chunks = 3 if bench.smoke else (20 if bench.quick else 60)
+    n_updates = 8 if bench.smoke else (50 if bench.quick else 200)
 
     key, k1, k2 = jax.random.split(key, 3)
     legacy_sps = _time_legacy_rollout(env, params, cfg, legacy_eps, k1)
@@ -206,7 +296,10 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
 
     key, k3 = jax.random.split(key)
     sweep = _time_scenario_sweep(env, params, cfg,
-                                 8 if bench.quick else 32, k3)
+                                 2 if bench.smoke else
+                                 (8 if bench.quick else 32), k3)
+
+    sharded = _time_sharded_population(bench)
 
     emit_csv_row("throughput/legacy_env_steps_per_sec", 1e6 / legacy_sps,
                  f"env_steps_per_sec={legacy_sps:.0f}")
@@ -220,6 +313,13 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
                  f"sweep_speedup={sweep['sweep_speedup']:.1f}x "
                  f"compiles={sweep['compiles']['scenario_sweep']}"
                  f"(vs {sweep['compiles']['per_point_loop']})")
+    emit_csv_row(
+        "throughput/sharded_population",
+        1e6 / max(sharded["env_steps_per_sec"]["sharded"], 1e-9),
+        f"env_steps_per_sec={sharded['env_steps_per_sec']['sharded']:.0f} "
+        f"devices={sharded['devices']} scenarios={sharded['scenarios']} "
+        f"num_envs={sharded['num_envs']} "
+        f"speedup_vs_1dev={sharded['sharded_speedup']:.2f}x")
     emit_csv_row("throughput/summary", 0.0,
                  f"rollout_speedup={rollout_speedup:.1f}x "
                  f"update_speedup={update_speedup:.1f}x "
@@ -233,8 +333,11 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
         "rollout_speedup": rollout_speedup,
         "update_speedup": update_speedup,
         "scenario_sweep": sweep,
+        "sharded_population": sharded,
     }
     save_json("throughput", payload)
+    if bench.smoke:  # smoke numbers are for rot detection, not tracking
+        return payload
     refresh = os.environ.get("BENCH_THROUGHPUT_REFRESH") == "1"
     if refresh or not os.path.exists(BASELINE_PATH):
         with open(BASELINE_PATH, "w") as f:
@@ -244,8 +347,10 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
         # added metric gets recorded into it the first time it is measured
         with open(BASELINE_PATH) as f:
             baseline = json.load(f)
-        if "scenario_sweep" not in baseline:
-            baseline["scenario_sweep"] = sweep
+        missing = [k for k in payload if k not in baseline]
+        if missing:
+            for k in missing:
+                baseline[k] = payload[k]
             with open(BASELINE_PATH, "w") as f:
                 json.dump(baseline, f, indent=1, default=float)
     return payload

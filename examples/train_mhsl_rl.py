@@ -68,6 +68,15 @@ def main():
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--num-envs", type=int, default=4,
                     help="vmapped env population per rollout chunk")
+    ap.add_argument("--shard-envs", action="store_true",
+                    help="shard the num-envs axis over a population mesh "
+                         "spanning every host device")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="save/resume RL training state under this directory")
+    ap.add_argument("--checkpoint-every", type=int, default=20,
+                    help="episodes between checkpoints (with --checkpoint-dir)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore an existing checkpoint and train from scratch")
     args = ap.parse_args()
 
     model_cfg_full = get_config(args.arch)
@@ -75,11 +84,21 @@ def main():
     prof = transformer_profile(model_cfg_full, batch=1, seq=128)
     env = MHSLEnv(profile=prof, net=NetworkConfig(max_split=args.stages))
     sac_cfg = SACConfig()
+    mesh = None
+    if args.shard_envs:
+        from repro.launch.mesh import make_population_mesh
+
+        mesh = make_population_mesh()
+        print(f"      population mesh: {len(jax.devices())} devices, "
+              f"num_envs axis sharded")
     print(f"[1/3] training ICM-CA SAC on {args.arch} profile "
           f"({prof.num_layers} layers, {args.episodes} episodes, "
           f"{args.num_envs} vmapped envs)...")
     res = train_sac(env, sac_cfg, episodes=args.episodes, warmup_episodes=10,
-                    num_envs=args.num_envs)
+                    num_envs=args.num_envs, mesh=mesh,
+                    checkpoint_dir=args.checkpoint_dir,
+                    checkpoint_every=args.checkpoint_every,
+                    resume=not args.fresh)
     print(f"      reward: first10={np.mean(res.episode_reward[:10]):.2f} "
           f"last10={np.mean(res.episode_reward[-10:]):.2f}")
 

@@ -1,3 +1,14 @@
 from repro.checkpoint.store import load_pytree, save_pytree
+from repro.checkpoint.train_state import (
+    latest_checkpoint_step,
+    load_train_checkpoint,
+    save_train_checkpoint,
+)
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "save_train_checkpoint",
+    "load_train_checkpoint",
+    "latest_checkpoint_step",
+]

@@ -15,16 +15,18 @@ hash of the discretized observation).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import train_state as TS
 from repro.core.agents import action_space as A
 from repro.core.agents import rollout as R
 from repro.core.agents import sac as SAC
 from repro.core.env import MHSLEnv
+from repro.distribution import population as PD
 
 
 def _obs_hash(obs: np.ndarray, bins: float = 4.0) -> int:
@@ -111,6 +113,10 @@ def train_sac(
     resample_positions: bool = False,
     num_envs: int = 1,
     scenario=None,
+    mesh=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 0,
+    resume: bool = True,
 ) -> TrainResult:
     """ICM-CA SAC training on the device-resident engine.
 
@@ -134,6 +140,20 @@ def train_sac(
     that begins at or past the boundary. If ``episodes`` is not a multiple
     of ``num_envs`` the final chunk still trains on the full population
     but only the first ``episodes`` entries are reported.
+
+    ``mesh`` (``launch.mesh.make_population_mesh``) shards the ``num_envs``
+    axis of env states / key batches and the replay buffer's capacity axis
+    across devices; agent params and optimizer state are replicated. The
+    compiled chunk functions are unchanged - jit propagates the committed
+    input shardings - so a 1-device mesh is bit-identical to ``mesh=None``.
+
+    ``checkpoint_dir`` + ``checkpoint_every`` save the complete loop state
+    (params, opt state, replay buffer, PRNG keys, episode counter, metric
+    curves, explored-state hashes) at chunk boundaries every
+    ``checkpoint_every`` episodes, plus once at the end. With ``resume``
+    (default) an existing checkpoint in the directory is restored and
+    training continues from its episode counter; the resumed trajectory is
+    bit-identical to an uninterrupted run.
     """
     if num_envs < 1:
         raise ValueError(f"num_envs must be >= 1, got {num_envs}")
@@ -160,13 +180,64 @@ def train_sac(
     key, kpos = jax.random.split(key)
     reset_key = kpos
 
+    # mesh placement: replicated agent, population-sharded replay storage
+    params = PD.replicate(params, mesh)
+    opt_state = PD.replicate(opt_state, mesh)
+    buf = PD.shard_population(buf, mesh, cfg.buffer_size)
+
+    # run fingerprint saved with every checkpoint: loop knobs plus the
+    # agent config and scenario physics the run was trained under -
+    # TS.validate_resume hard-errors on any mismatch
+    meta = dict(seed=seed, num_envs=num_envs,
+                warmup_episodes=warmup_episodes,
+                resample_positions=resample_positions,
+                cfg=repr(cfg), scenario=TS.pytree_fingerprint(scenario))
+
     ep = 0
+    last_saved = None
+    if checkpoint_dir and resume and (
+        TS.latest_checkpoint_step(checkpoint_dir) is not None
+    ):
+        like = dict(params=params, opt_state=opt_state, buf=buf,
+                    key=key, reset_key=reset_key)
+        step, dev, host = TS.load_train_checkpoint(checkpoint_dir, like)
+        TS.validate_resume(host, meta, episodes, checkpoint_dir)
+        params, opt_state, buf = dev["params"], dev["opt_state"], dev["buf"]
+        key, reset_key = dev["key"], dev["reset_key"]
+        ep = last_saved = int(host["ep"])
+        result.episode_reward = list(host["episode_reward"])
+        result.episode_leak = list(host["episode_leak"])
+        result.episode_violation = list(host["episode_violation"])
+        result.states_explored = list(host["states_explored"])
+        seen = set(host["seen"])
+
+    def _save(ep_now: int) -> None:
+        TS.save_train_checkpoint(
+            checkpoint_dir, ep_now,
+            dict(params=params, opt_state=opt_state, buf=buf,
+                 key=key, reset_key=reset_key),
+            dict(ep=ep_now, meta=meta,
+                 episode_reward=result.episode_reward,
+                 episode_leak=result.episode_leak,
+                 episode_violation=result.episode_violation,
+                 states_explored=result.states_explored,
+                 seen=sorted(seen)),
+        )
+
     while ep < episodes:
+        # chunk-boundary checkpoint: the state right here fully determines
+        # the remainder of the run (keys are split inside the chunk)
+        if (checkpoint_dir and checkpoint_every
+                and (last_saved is None or ep - last_saved >= checkpoint_every)):
+            _save(ep)
+            last_saved = ep
         if resample_positions:
             key, reset_key = jax.random.split(key)
         rkeys = R.episode_reset_keys(reset_key, num_envs, resample_positions)
         key, ksub = jax.random.split(key)
         akeys = jax.random.split(ksub, num_envs)
+        rkeys = PD.shard_population(rkeys, mesh, num_envs)
+        akeys = PD.shard_population(akeys, mesh, num_envs)
 
         st0 = reset_batch(rkeys, scenario)
         rollout = rollout_uniform if ep < warmup_episodes else rollout_actor
@@ -181,6 +252,9 @@ def train_sac(
             key, ku = jax.random.split(key)
             params, opt_state, _ = fused_update(params, opt_state, buf, ku)
         ep += num_envs
+
+    if checkpoint_dir and last_saved != ep:
+        _save(ep)
 
     result.params = params  # type: ignore[attr-defined]
     return result

@@ -103,6 +103,11 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                     )
                 return x
 
+            # loss accumulators are (1,)-shaped, not scalars: they differ
+            # across stages (only the last stage emits loss), and shard_map's
+            # partial-eval cannot concatenate rank-0 residuals that vary over
+            # the mesh - jax.grad through the pipeline needs the singleton
+            # axis (see test_pipeline_matches_reference).
             def tick(carry, t):
                 x, loss_acc, nloss = carry
                 # stage 0 ingests microbatch t (if valid)
@@ -117,8 +122,8 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                 logits = jnp.einsum("bsd,dv->bsv", xh, head.astype(x.dtype))
                 lab = lab_mb[jnp.clip(mb_out, 0, n_microbatches - 1)]
                 li = M.softmax_xent(logits, lab)
-                loss_acc = loss_acc + jnp.where(is_out, li, 0.0)
-                nloss = nloss + jnp.where(is_out, 1.0, 0.0)
+                loss_acc = loss_acc + jnp.where(is_out, li, 0.0)[None]
+                nloss = nloss + jnp.where(is_out, 1.0, 0.0)[None]
                 # hop to the next stage (the multi-hop transmission, Eq. 1)
                 perm = [(i, (i + 1) % s_stages) for i in range(s_stages)]
                 x = jax.lax.ppermute(x, stage_axis, perm)
@@ -127,12 +132,12 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
             x0 = jnp.zeros((mb, t_len, cfg.d_model), jnp.bfloat16)
             ticks = n_microbatches + s_stages - 1
             (x, loss_acc, nloss), _ = jax.lax.scan(
-                tick, (x0, jnp.zeros(()), jnp.zeros(())), jnp.arange(ticks)
+                tick, (x0, jnp.zeros((1,)), jnp.zeros((1,))), jnp.arange(ticks)
             )
             # broadcast the last stage's mean loss to everyone
             total = jax.lax.psum(loss_acc, stage_axis)
             cnt = jax.lax.psum(nloss, stage_axis)
-            return total / jnp.maximum(cnt, 1.0)
+            return (total / jnp.maximum(cnt, 1.0))[0]
 
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         loss = shard_map(

@@ -168,9 +168,17 @@ def jit_cache_size(fn) -> int:
 
     Accepts either a jitted function or one of this module's /
     ``rollout``'s wrappers (which expose their inner jit as ``.jitted``).
+    Falls back to the wrapper's retrace counter on jax versions without
+    the (private) ``_cache_size`` introspection.
     """
     inner = getattr(fn, "jitted", fn)
-    return inner._cache_size()
+    if hasattr(inner, "_cache_size"):
+        return inner._cache_size()
+    trace_count = getattr(fn, "trace_count", None)
+    if trace_count is not None:
+        return trace_count[0]
+    raise AttributeError(
+        "no jit cache introspection available on this jax version")
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +309,10 @@ def _stack_like(tree, n: int):
 def train_population(env, cfg, scenarios: ScenarioParams, *,
                      episodes: int = 200, seed: int = 0,
                      warmup_episodes: int = 10, num_envs: int = 1,
-                     resample_positions: bool = False) -> PopulationResult:
+                     resample_positions: bool = False, mesh=None,
+                     checkpoint_dir: Optional[str] = None,
+                     checkpoint_every: int = 0,
+                     resume: bool = True) -> PopulationResult:
     """Train one ICM-CA SAC agent per scenario, all scenarios in lockstep.
 
     The whole chunk cycle - vmapped rollout over ``(N, num_envs)``,
@@ -311,12 +322,27 @@ def train_population(env, cfg, scenarios: ScenarioParams, *,
     warmup rounding, and metric bookkeeping match ``loops.train_sac``
     (every scenario shares the chunk schedule, reset keys, and action
     keys, so sweep points differ only by their physics).
+
+    ``mesh`` (``launch.mesh.make_population_mesh``) shards the SCENARIO
+    axis across devices: per-scenario agent params, optimizer state,
+    replay buffers, and the stacked ``ScenarioParams`` all carry their
+    leading ``N`` axis on the mesh, while the shared reset/action keys are
+    replicated - pure data parallelism over sweep points, with metrics
+    all-gathered by the per-chunk ``device_get``. The compiled chunk
+    functions are unchanged, so a 1-device mesh is bit-identical to the
+    plain vmap path (pinned by ``tests/test_population_mesh.py``).
+
+    ``checkpoint_dir`` / ``checkpoint_every`` / ``resume`` behave as in
+    ``loops.train_sac``: complete loop state saved at chunk boundaries,
+    bit-exact continuation on restore.
     """
+    from repro.checkpoint import train_state as TS
     from repro.core.agents import rollout as R
     from repro.core.agents import sac as SAC
     from repro.core.agents.loops import (
         TrainResult, _chunk_metrics, _sac_example, _SAC_FIELDS,
     )
+    from repro.distribution import population as PD
 
     if num_envs < 1:
         raise ValueError(f"num_envs must be >= 1, got {num_envs}")
@@ -355,20 +381,73 @@ def train_population(env, cfg, scenarios: ScenarioParams, *,
     seen: List[set] = [set() for _ in range(n)]
     key, reset_key = jax.random.split(key)
 
+    # mesh placement: scenario axis sharded, shared chunk keys replicated
+    params = PD.shard_population(params, mesh, n)
+    opt_state = PD.shard_population(opt_state, mesh, n)
+    buf = PD.shard_population(buf, mesh, n)
+    scenarios = PD.shard_population(scenarios, mesh, n)
+
+    # run fingerprint: loop knobs + agent config + the stacked scenario
+    # physics; TS.validate_resume hard-errors on any mismatch (editing a
+    # sweep grid must not silently resume the old grid's checkpoint)
+    meta = dict(seed=seed, num_envs=num_envs, num_scenarios=n,
+                warmup_episodes=warmup_episodes,
+                resample_positions=resample_positions,
+                cfg=repr(cfg), scenario=TS.pytree_fingerprint(scenarios))
+
     ep = 0
+    last_saved = None
+    if checkpoint_dir and resume and (
+        TS.latest_checkpoint_step(checkpoint_dir) is not None
+    ):
+        like = dict(params=params, opt_state=opt_state, buf=buf,
+                    key=key, reset_key=reset_key)
+        _, dev, host = TS.load_train_checkpoint(checkpoint_dir, like)
+        TS.validate_resume(host, meta, episodes, checkpoint_dir)
+        params, opt_state, buf = dev["params"], dev["opt_state"], dev["buf"]
+        key, reset_key = dev["key"], dev["reset_key"]
+        ep = last_saved = int(host["ep"])
+        for res, saved in zip(pop.results, host["results"]):
+            res.episode_reward = list(saved["episode_reward"])
+            res.episode_leak = list(saved["episode_leak"])
+            res.episode_violation = list(saved["episode_violation"])
+            res.states_explored = list(saved["states_explored"])
+        seen = [set(s) for s in host["seen"]]
+
+    def _save(ep_now: int) -> None:
+        TS.save_train_checkpoint(
+            checkpoint_dir, ep_now,
+            dict(params=params, opt_state=opt_state, buf=buf,
+                 key=key, reset_key=reset_key),
+            dict(ep=ep_now, meta=meta,
+                 results=[dict(episode_reward=r.episode_reward,
+                               episode_leak=r.episode_leak,
+                               episode_violation=r.episode_violation,
+                               states_explored=r.states_explored)
+                          for r in pop.results],
+                 seen=[sorted(s) for s in seen]),
+        )
+
     while ep < episodes:
+        if (checkpoint_dir and checkpoint_every
+                and (last_saved is None or ep - last_saved >= checkpoint_every)):
+            _save(ep)
+            last_saved = ep
         if resample_positions:
             key, reset_key = jax.random.split(key)
         rkeys = R.episode_reset_keys(reset_key, num_envs, resample_positions)
         key, ksub = jax.random.split(key)
         akeys = jax.random.split(ksub, num_envs)
+        rkeys = PD.replicate(rkeys, mesh)
+        akeys = PD.replicate(akeys, mesh)
 
         rollout = rollout_uniform if ep < warmup_episodes else rollout_actor
         _, traj = rollout(params, rkeys, akeys, scenarios)
 
         buf = vm_add(buf, _flatten(traj))
-        # one device->host transfer for all scenarios, then the standard
-        # per-episode bookkeeping on each scenario's numpy slice
+        # one device->host transfer for all scenarios (all-gathering the
+        # scenario shards), then the standard per-episode bookkeeping on
+        # each scenario's numpy slice
         host = jax.device_get({k: traj[k] for k in ("obs", "reward", "leak",
                                                     "viol")})
         for s in range(n):
@@ -378,9 +457,12 @@ def train_population(env, cfg, scenarios: ScenarioParams, *,
 
         if ep >= warmup_episodes and int(buf.size[0]) >= cfg.batch:
             key, ku = jax.random.split(key)
-            params, opt_state, _ = vm_fused(params, opt_state, buf,
-                                            jax.random.split(ku, n))
+            ukeys = PD.shard_population(jax.random.split(ku, n), mesh, n)
+            params, opt_state, _ = vm_fused(params, opt_state, buf, ukeys)
         ep += num_envs
+
+    if checkpoint_dir and last_saved != ep:
+        _save(ep)
 
     pop.params = params
     return pop

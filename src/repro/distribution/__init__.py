@@ -3,6 +3,9 @@ from repro.distribution.sharding import (
     cache_shardings,
     named,
     param_shardings,
+    population_axes,
+    population_sharding,
+    replicated_sharding,
     spec_for_param,
 )
 
@@ -11,5 +14,8 @@ __all__ = [
     "cache_shardings",
     "named",
     "param_shardings",
+    "population_axes",
+    "population_sharding",
+    "replicated_sharding",
     "spec_for_param",
 ]

@@ -1,0 +1,82 @@
+"""Mesh-aware placement for the vectorized RL population engine.
+
+PR 1 made rollouts a vmapped ``lax.scan`` population and PR 2 added the
+scenario axis on top - but the whole population still lived on ONE device,
+so sweep breadth (number of scenarios x envs the paper's Figs. 3-8 need)
+was capped by a single accelerator. This module scales that population
+axis across a device mesh with data placement only:
+
+* the ``num_envs`` / scenario axis of env states, PRNG key batches, and
+  replay buffers is sharded over the mesh's population axes
+  (``NamedSharding``; see ``sharding.population_axes``);
+* agent parameters and optimizer state stay replicated (``train_sac``) or
+  ride the scenario axis (``train_population``, one agent per scenario);
+* the compiled functions themselves are UNCHANGED - jit propagates the
+  committed input shardings through the vmapped scans (GSPMD), so the
+  1-device-mesh path runs the exact same executable as the plain vmap
+  path and is bit-identical to it (pinned by
+  ``tests/test_population_mesh.py``);
+* metrics leave the device through ``jax.device_get``, which all-gathers
+  the population shards into one host array.
+
+Per-env computation is embarrassingly parallel along the population axis,
+so sharding it adds no collectives to the rollout itself; cross-env
+reductions (replay sampling, fused update batches) are handled by GSPMD
+where they occur.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distribution.sharding import (
+    population_sharding,
+    replicated_sharding,
+)
+
+
+def mesh_size(mesh: Mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def population_shardings(tree: Any, mesh: Mesh, num: int) -> Any:
+    """NamedSharding tree for a population-axis pytree.
+
+    Leaves with a leading axis of size ``num`` get that axis sharded over
+    the mesh's population axes; every other leaf (scalars, ring pointers,
+    shared keys) is replicated. The same rule serves env-state chunks
+    (``num = num_envs``), replay buffers (``num = capacity``), and stacked
+    per-scenario train state (``num = num_scenarios``).
+    """
+
+    def one(x):
+        shape = jax.numpy.shape(x)
+        if len(shape) >= 1 and shape[0] == num:
+            return population_sharding(mesh, num, len(shape))
+        return replicated_sharding(mesh)
+
+    return jax.tree.map(one, tree)
+
+
+def shard_population(tree: Any, mesh: Optional[Mesh], num: int) -> Any:
+    """``device_put`` a population pytree with its leading axis sharded.
+
+    ``mesh=None`` is the no-mesh fast path (identity) so trainers can
+    thread an optional mesh without branching at every call site.
+    """
+    if mesh is None:
+        return tree
+    return jax.tree.map(
+        jax.device_put, tree, population_shardings(tree, mesh, num)
+    )
+
+
+def replicate(tree: Any, mesh: Optional[Mesh]) -> Any:
+    """``device_put`` a pytree fully replicated over the mesh (agent
+    params / optimizer state shared by every population shard)."""
+    if mesh is None:
+        return tree
+    sh = replicated_sharding(mesh)
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)

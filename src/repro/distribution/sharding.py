@@ -65,6 +65,38 @@ def batch_sharding(mesh: Mesh, batch_spec, *, extra_dims: int = 1) -> NamedShard
 
 
 # ---------------------------------------------------------------------------
+# population / env-axis sharding (RL engine)
+# ---------------------------------------------------------------------------
+
+ENV_AXIS = "env"
+
+
+def population_axes(mesh: Mesh, num: int):
+    """Mesh axes for a population axis of size ``num``.
+
+    A dedicated ``'env'`` axis (``launch.mesh.make_population_mesh``) wins;
+    otherwise the population rides the pure-data-parallel prefix of a
+    production mesh (``('pod', 'data')``), largest divisible prefix. Returns
+    ``None`` (replicate) when nothing divides ``num``.
+    """
+    if ENV_AXIS in mesh.axis_names:
+        return _maybe(ENV_AXIS, num, mesh)
+    return batch_axes(mesh, num)
+
+
+def population_sharding(mesh: Mesh, num: int, ndim: int) -> NamedSharding:
+    """Sharding for a ``(num, ...)`` population-axis array of rank ``ndim``:
+    leading axis over the population mesh axes, everything else replicated.
+    Indivisible populations fall back to full replication."""
+    return named(mesh, population_axes(mesh, num), *([None] * (ndim - 1)))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement (agent params shared by every shard)."""
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
 # parameter sharding by key path
 # ---------------------------------------------------------------------------
 

@@ -10,21 +10,45 @@ Target hardware: TPU v5e pods, 256 chips/pod (16x16 ICI torus); multi-pod =
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer releases; every axis here
+    is Auto anyway, which is also the default where the kwarg exists."""
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters and hasattr(
+        jax.sharding, "AxisType"
+    ):
+        types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=types)
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many devices the host actually has (tests)."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_population_mesh(num_devices: int | None = None, axis: str = "env"):
+    """1-D mesh over host devices for the RL engine's population axis.
+
+    The vectorized trainers shard the ``num_envs`` / scenario axis of their
+    env states and replay buffers over this mesh (agent params stay
+    replicated); a 1-device mesh is the bit-identical fallback to the plain
+    vmap path. ``num_devices=None`` takes every device the host has.
+    """
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else num_devices
+    assert n <= len(devs), (n, len(devs))
+    return _make_mesh((n,), (axis,))

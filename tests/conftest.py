@@ -9,6 +9,19 @@ SRC = os.path.join(REPO, "src")
 sys.path.insert(0, SRC)
 
 
+def pytest_configure(config):
+    # The known-failure set lives IN-REPO as a marker (not as a hand-curated
+    # --deselect list in the CI workflow): the CI gate runs
+    # ``-m "not seed_broken"`` and the marked set shrinks as subsystems get
+    # fixed. A full local ``pytest`` run still executes the marked tests.
+    config.addinivalue_line(
+        "markers",
+        "seed_broken: failing since the repo seed (shard_map/jax-version "
+        "breakage in subsystems untouched since then); excluded from the CI "
+        "gate - remove the mark when the subsystem is fixed",
+    )
+
+
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:
     """Run a python snippet in a subprocess with a forced host device count.
 

