@@ -5,7 +5,21 @@ Measures, with the SAME ``SACConfig`` on the current backend:
 * ``env_steps_per_sec`` - the seed's per-step host loop (one jit dispatch
   per env call, host history window) vs the vmapped ``lax.scan`` rollout.
 * ``updates_per_sec`` - per-call jitted SAC updates fed by the host-numpy
-  replay buffer vs the fused update scan sampling the device buffer.
+  replay buffer vs the fused update scan sampling the device buffer (both
+  sides run the seed's sequential three-backward update, so this metric
+  keeps tracking pure dispatch overhead).
+* ``update_path`` - the gradient-update ladder on the device buffer:
+  seed host loop -> fused scan (sequential update) -> fused scan with the
+  single-backward JOINT update (``cfg.joint_update``, shared
+  critic/ICM forwards). CI gates joint-fused >= 1x the seed loop; on the
+  2-core CPU box it lands ~1.35x (small-op dispatch bound - the 128-wide
+  layers leave little backward-count FLOP savings to reclaim), with the
+  structural headroom aimed at accelerator backends.
+* ``fused_chunk`` - end-to-end training-chunk rate: the PR-3 loop
+  (three dispatches per chunk, ``int(buf.size)`` host sync, full-obs
+  transfer + per-row Python state hashing) vs ONE buffer-donated
+  ``make_train_chunk`` call with device-reduced metrics, plus the
+  resulting ``train_sac`` episodes/sec.
 * ``scenario_sweep`` - a 5-point ``monitor_prob`` evaluation sweep: the
   seed's per-point loop (fresh env + fresh jits per point, one recompile
   each) vs one stacked-``ScenarioParams`` call through the population
@@ -141,6 +155,149 @@ def _time_engine_updates(update, params, opt_state, dev_buf, cfg,
     return repeats * n_updates / (time.perf_counter() - t0)
 
 
+def _time_update_paths(env, params, np_buf, dev_buf, cfg, n_updates: int):
+    """The update ladder: seed host loop -> fused sequential -> fused joint.
+
+    All three run the same ``SACConfig`` losses on identical buffers; the
+    only variables are dispatch granularity and backward count. The two
+    rungs feeding the CI gate (legacy, fused joint) take the best of two
+    timing windows so a scheduling blip on a shared runner cannot flip
+    the gated ratio on its own."""
+    dims = env.action_dims
+    seq_cfg = replace(cfg, joint_update=False)
+    upd_seq, init_seq = SAC.make_update(dims, seq_cfg)
+    upd_joint, init_joint = SAC.make_update(dims, replace(cfg,
+                                                          joint_update=True))
+    legacy = max(
+        _time_legacy_updates(upd_seq, params, init_seq(params), np_buf, cfg,
+                             n_updates)
+        for _ in range(2)
+    )
+    fused_seq = _time_engine_updates(upd_seq, params, init_seq(params),
+                                     dev_buf, cfg, n_updates)
+    fused_joint = max(
+        _time_engine_updates(upd_joint, params, init_joint(params), dev_buf,
+                             cfg, n_updates)
+        for _ in range(2)
+    )
+    return {
+        "n_updates": n_updates,
+        "updates_per_sec": {"legacy": legacy, "fused_sequential": fused_seq,
+                            "fused_joint": fused_joint},
+        "joint_speedup_vs_legacy": fused_joint / legacy,
+        "joint_speedup_vs_fused_sequential": fused_joint / fused_seq,
+    }
+
+
+def _legacy_obs_hash(obs, bins: float = 4.0) -> int:
+    """The PR-3 per-row Python state hash (kept here as the baseline's
+    metric cost; the engine now packs keys on device)."""
+    o = np.asarray(obs)
+    discrete = o[3:]
+    head = np.round(o[:3] * bins)
+    return hash(tuple(np.round(discrete * bins).astype(np.int64).tolist())
+                + tuple(head.astype(np.int64).tolist()))
+
+
+def _time_chunk_loops(env, cfg, chunks: int, num_envs: int, key):
+    """PR-3 chunk loop vs the fused train chunk, same chunk schedule.
+
+    Both sides are warmed (compiles excluded), then timed over ``chunks``
+    training chunks of ``num_envs`` episodes including all their per-chunk
+    host work. Also reports end-to-end ``train_sac`` episodes/sec for the
+    same workload (one-time compiles INCLUDED, as a user pays them)."""
+    from repro.core.agents.loops import (
+        TrainResult, _reduced_chunk_metrics, _sac_example, _SAC_FIELDS,
+        train_sac,
+    )
+
+    adims = env.action_dims
+    key, k0, kr, ka, ku = jax.random.split(key, 5)
+    params0 = SAC.init_agent(k0, env.obs_dim, adims, cfg)
+    n_updates = cfg.updates_per_step * env.episode_len * num_envs
+    rkeys = jax.random.split(kr, num_envs)
+    akeys = jax.random.split(ka, num_envs)
+    episodes = chunks * num_envs
+
+    # --- PR-3 replica: separate dispatches + host syncs per chunk --------
+    upd_seq, init_seq = SAC.make_update(adims, replace(cfg,
+                                                       joint_update=False))
+    reset_batch = R.make_batched_reset(env)
+    rollout_actor = R.make_batched_rollout(env, R.sac_policy(adims, cfg),
+                                           cfg.hist_len)
+    fused = R.make_fused_update(upd_seq, cfg.batch, n_updates)
+
+    def pr3_chunk(params, opt_state, buf, result, seen):
+        st0 = reset_batch(rkeys)
+        _, traj = rollout_actor(params, st0, akeys)
+        buf = R.buffer_add(buf, R.flatten_transitions(traj, _SAC_FIELDS))
+        host = jax.device_get({k: traj[k] for k in ("obs", "reward", "leak",
+                                                    "viol")})
+        for i in range(num_envs):
+            for row in host["obs"][i]:
+                seen.add(_legacy_obs_hash(row))
+            result.episode_reward.append(float(host["reward"][i].sum()))
+            result.episode_leak.append(float(host["leak"][i].sum()))
+            result.episode_violation.append(float(host["viol"][i].sum()))
+            result.states_explored.append(len(seen))
+        if int(buf.size) >= cfg.batch:  # the per-chunk host size sync
+            params, opt_state, _ = fused(params, opt_state, buf, ku)
+        return params, opt_state, buf
+
+    buf = R.buffer_init(cfg.buffer_size, _sac_example(env, cfg))
+    params, opt_state = params0, init_seq(params0)
+    for _ in range(2):  # warm the jits AND fill past batch size so every
+        # timed chunk runs its update scan (needs num_envs*T*2 >= batch)
+        params, opt_state, buf = pr3_chunk(params, opt_state, buf,
+                                           TrainResult(), set())
+    result, seen = TrainResult(), set()
+    t0 = time.perf_counter()
+    for _ in range(chunks):
+        params, opt_state, buf = pr3_chunk(params, opt_state, buf, result,
+                                           seen)
+    pr3_eps = episodes / (time.perf_counter() - t0)
+
+    # --- fused chunk: one buffer-donated dispatch per chunk --------------
+    upd_joint, init_joint = SAC.make_update(adims, cfg)
+    chunk = R.make_train_chunk(
+        env, R.uniform_policy(adims), R.sac_policy(adims, cfg), upd_joint,
+        hist_len=cfg.hist_len, fields=_SAC_FIELDS, batch_size=cfg.batch,
+        n_updates=n_updates,
+    )
+    buf = R.buffer_init(cfg.buffer_size, _sac_example(env, cfg))
+    params, opt_state = params0, init_joint(params0)
+    train = jnp.asarray(True)
+    for _ in range(2):  # warm + fill, mirroring the PR-3 side
+        params, opt_state, buf, m = chunk(params, opt_state, buf, rkeys,
+                                          akeys, ku, train)
+        _reduced_chunk_metrics(TrainResult(), set(), jax.device_get(m), 0,
+                               episodes, num_envs)
+    result, seen = TrainResult(), set()
+    t0 = time.perf_counter()
+    for c in range(chunks):
+        params, opt_state, buf, m = chunk(params, opt_state, buf, rkeys,
+                                          akeys, ku, train)
+        _reduced_chunk_metrics(result, seen, jax.device_get(m),
+                               c * num_envs, episodes, num_envs)
+    fused_eps = episodes / (time.perf_counter() - t0)
+
+    # --- end-to-end train_sac on the fused engine (compiles included) ----
+    t0 = time.perf_counter()
+    train_sac(env, cfg, episodes=episodes, warmup_episodes=num_envs,
+              num_envs=num_envs, seed=1)
+    e2e_eps = episodes / (time.perf_counter() - t0)
+
+    return {
+        "num_envs": num_envs,
+        "chunks": chunks,
+        "episodes": episodes,
+        "episodes_per_sec": {"pr3_chunk_loop": pr3_eps,
+                             "fused_chunk": fused_eps,
+                             "train_sac_end_to_end": e2e_eps},
+        "fused_chunk_speedup": fused_eps / pr3_eps,
+    }
+
+
 SWEEP_QS = (0.3, 0.45, 0.6, 0.75, 0.9)
 
 
@@ -272,15 +429,21 @@ def _time_sharded_population(bench: BenchConfig):
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     env = MHSLEnv(profile=resnet101_profile(batch=1))
     cfg = SAC.SACConfig()
+    # the seed's update path for the legacy-tracking metrics, so
+    # `updates_per_sec` keeps its historical meaning (dispatch overhead
+    # with an identical update fn on both sides)
+    seq_update, seq_init = SAC.make_update(env.action_dims,
+                                           replace(cfg, joint_update=False))
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
     params = SAC.init_agent(k0, env.obs_dim, env.action_dims, cfg)
-    update, init_opt = SAC.make_update(env.action_dims, cfg)
-    opt_state = init_opt(params)
+    opt_state = seq_init(params)
 
     legacy_eps = 3 if bench.smoke else (20 if bench.quick else 60)
     engine_chunks = 3 if bench.smoke else (20 if bench.quick else 60)
     n_updates = 8 if bench.smoke else (50 if bench.quick else 200)
+    chunk_chunks = 2 if bench.smoke else (6 if bench.quick else 16)
+    chunk_envs = 8 if bench.smoke else NUM_ENVS
 
     key, k1, k2 = jax.random.split(key, 3)
     legacy_sps = _time_legacy_rollout(env, params, cfg, legacy_eps, k1)
@@ -288,11 +451,18 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     rollout_speedup = engine_sps / legacy_sps
 
     np_buf, dev_buf = _fill_buffers(env, params, cfg)
-    legacy_ups = _time_legacy_updates(update, params, opt_state, np_buf, cfg,
-                                      n_updates)
-    engine_ups = _time_engine_updates(update, params, opt_state, dev_buf, cfg,
-                                      n_updates)
+    legacy_ups = _time_legacy_updates(seq_update, params, opt_state, np_buf,
+                                      cfg, n_updates)
+    engine_ups = _time_engine_updates(seq_update, params, opt_state, dev_buf,
+                                      cfg, n_updates)
     update_speedup = engine_ups / legacy_ups
+
+    # the update ladder feeds a CI gate, so even smoke mode measures
+    # enough updates to amortize dispatch noise
+    update_path = _time_update_paths(env, params, np_buf, dev_buf, cfg,
+                                     max(n_updates, 32))
+    key, kc = jax.random.split(key)
+    fused_chunk = _time_chunk_loops(env, cfg, chunk_chunks, chunk_envs, kc)
 
     key, k3 = jax.random.split(key)
     sweep = _time_scenario_sweep(env, params, cfg,
@@ -309,6 +479,16 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
                  f"updates_per_sec={legacy_ups:.0f}")
     emit_csv_row("throughput/engine_updates_per_sec", 1e6 / engine_ups,
                  f"updates_per_sec={engine_ups:.0f}")
+    joint_ups = update_path["updates_per_sec"]["fused_joint"]
+    emit_csv_row("throughput/update_path", 1e6 / joint_ups,
+                 f"updates_per_sec={joint_ups:.0f} "
+                 f"joint_speedup_vs_legacy="
+                 f"{update_path['joint_speedup_vs_legacy']:.2f}x")
+    fc = fused_chunk["episodes_per_sec"]
+    emit_csv_row("throughput/fused_chunk", 1e6 / max(fc["fused_chunk"], 1e-9),
+                 f"episodes_per_sec={fc['fused_chunk']:.2f} "
+                 f"vs_pr3={fused_chunk['fused_chunk_speedup']:.2f}x "
+                 f"train_sac={fc['train_sac_end_to_end']:.2f}")
     emit_csv_row("throughput/scenario_sweep", 1e6 * sweep["scenario_sweep_s"],
                  f"sweep_speedup={sweep['sweep_speedup']:.1f}x "
                  f"compiles={sweep['compiles']['scenario_sweep']}"
@@ -332,6 +512,8 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
         "updates_per_sec": {"legacy": legacy_ups, "engine": engine_ups},
         "rollout_speedup": rollout_speedup,
         "update_speedup": update_speedup,
+        "update_path": update_path,
+        "fused_chunk": fused_chunk,
         "scenario_sweep": sweep,
         "sharded_population": sharded,
     }

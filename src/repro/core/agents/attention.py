@@ -39,7 +39,11 @@ def cross_attention(params, obs, history, hist_mask=None):
     q = jnp.concatenate([q_s[..., None, :], q_h], axis=-2)  # (..., I+1, C)
     scores = jnp.einsum("...qc,...ic->...qi", q, k) / math.sqrt(c)
     if hist_mask is not None:
-        scores = jnp.where(hist_mask[..., None, :] > 0, scores, -1e9)
+        # dtype-aware mask value: a -1e9 literal overflows fp16 to -inf
+        # (NaN softmax rows once every entry is masked) and wastes bf16
+        # range; finfo.min is the most-negative finite score in any dtype
+        scores = jnp.where(hist_mask[..., None, :] > 0, scores,
+                           jnp.finfo(scores.dtype).min)
     # guard: if no history at all, attention output is zeros
     any_valid = (
         (hist_mask.sum(-1, keepdims=True) > 0)
@@ -49,5 +53,37 @@ def cross_attention(params, obs, history, hist_mask=None):
     w = jax.nn.softmax(scores, axis=-1)
     attended = jnp.einsum("...qi,...ic->...qc", w, v)
     s_prime = attended[..., 0, :]  # the current-state row
+    s_prime = jnp.where(any_valid, s_prime, jnp.zeros_like(s_prime))
+    return jnp.concatenate([obs, s_prime], axis=-1)
+
+
+def cross_attention_slim(params, obs, history, hist_mask=None):
+    """``cross_attention`` minus the dead work: only the current-state row.
+
+    The actor consumes only ``attended[..., 0, :]``, so the ``W_Q H``
+    projection and the I history-query score rows never reach the output -
+    their gradients are exactly zero. This variant scores the single
+    ``q_s`` row against K (one ``(..., I)`` score vector instead of the
+    ``(..., I+1, I)`` matrix), same values and gradients as the reference
+    for everything that survives (``wq_h``'s zero gradient included, since
+    autodiff emits zeros for unused leaves). Used on the update hot path
+    (``sac.joint_loss``); the full reference stays the pinned semantics
+    for rollout policies and the Pallas kernel parity tests.
+    """
+    q_s = obs @ params["wq_s"]  # (..., C)
+    k = history @ params["wk"]
+    v = history @ params["wv"]
+    c = k.shape[-1]
+    scores = jnp.einsum("...c,...ic->...i", q_s, k) / math.sqrt(c)
+    if hist_mask is not None:
+        scores = jnp.where(hist_mask > 0, scores,
+                           jnp.finfo(scores.dtype).min)
+    any_valid = (
+        (hist_mask.sum(-1, keepdims=True) > 0)
+        if hist_mask is not None
+        else jnp.ones(scores.shape[:-1] + (1,), bool)
+    )
+    w = jax.nn.softmax(scores, axis=-1)
+    s_prime = jnp.einsum("...i,...ic->...c", w, v)
     s_prime = jnp.where(any_valid, s_prime, jnp.zeros_like(s_prime))
     return jnp.concatenate([obs, s_prime], axis=-1)

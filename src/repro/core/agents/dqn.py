@@ -10,6 +10,12 @@ Training runs on the shared device-resident rollout engine
 device inside the scanned rollout, transitions land in the device replay
 buffer, and each chunk's gradient steps (with periodic target-network
 syncs) run in one fused ``lax.scan``.
+
+The update is already single-backward with no duplicated forwards (one
+Q forward on ``obs`` with grad, one target forward on ``obs_next``
+without), so the SAC joint-update restructure has nothing to fuse here;
+the flat action mask is likewise computed once per step in the policy
+and reused as ``mask_next`` by shifting the trajectory.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.agents import action_space as A
 from repro.core.agents import rollout as R
 from repro.core.env import MHSLEnv, NBINS
 from repro.nn import init_mlp, mlp_apply
@@ -82,8 +89,8 @@ def _dqn_policy(env: MHSLEnv) -> R.Policy:
         fm = flat_mask(env, masks)
         q = mlp_apply(bundle["q"], obs)
         k_explore, k_rand = jax.random.split(key)
-        rand_a = jax.random.categorical(k_rand, jnp.where(fm, 0.0, -1e9))
-        greedy_a = jnp.argmax(jnp.where(fm, q, -1e9))
+        rand_a = jax.random.categorical(k_rand, jnp.where(fm, 0.0, A.NEG))
+        greedy_a = jnp.argmax(jnp.where(fm, q, A.NEG))
         explore = jax.random.uniform(k_explore) < bundle["eps"]
         a_idx = jnp.where(explore, rand_a, greedy_a).astype(jnp.int32)
         # fm is recorded so mask_next can be derived by shifting the
@@ -123,7 +130,7 @@ def _make_dqn_update(cfg: DQNConfig, opt):
             q = mlp_apply(params, batch["obs"])
             qa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
             qn = mlp_apply(target, batch["obs_next"])
-            qn = jnp.where(batch["mask_next"] > 0, qn, -1e9).max(-1)
+            qn = jnp.where(batch["mask_next"] > 0, qn, A.NEG).max(-1)
             tgt = batch["reward"] + cfg.gamma * (1 - batch["done"]) * qn
             return jnp.mean((qa - jax.lax.stop_gradient(tgt)) ** 2)
 

@@ -1,16 +1,18 @@
 """Training loops: episode rollout + off-policy updates (Algorithm 1).
 
 Built on the device-resident rollout engine (``repro.core.agents.rollout``):
-a vmapped population of ``num_envs`` environments is stepped under
-``lax.scan`` over the full episode, transitions land in a device replay
-buffer in one batched write, and all gradient updates for the chunk run in
-a single fused scan. The only per-chunk host traffic is one ``device_get``
-of the episode metrics + observations (the latter feeds the paper's
-distinct-states-explored counter, Fig. 7).
+``train_sac`` runs each chunk - env reset, the vmapped ``lax.scan``
+episode rollout over ``num_envs`` environments, the batched replay-buffer
+write, the fused gradient-update scan, and the per-episode metric
+reduction - as ONE jitted, buffer-donated call
+(``rollout.make_train_chunk``). The only per-chunk host traffic is a
+single ``device_get`` of the reduced metrics (episode sums plus packed
+discretized-obs state keys); there is no ``int(buf.size)`` sync and no
+full-trajectory transfer.
 
 Tracks the paper's figure metrics: accumulated reward per episode (Figs.
 3-4), information leaked (Figs. 5-6), and distinct states explored (Fig. 7,
-hash of the discretized observation).
+packed key of the discretized observation).
 """
 from __future__ import annotations
 
@@ -29,16 +31,33 @@ from repro.core.env import MHSLEnv
 from repro.distribution import population as PD
 
 
-def _obs_hash(obs: np.ndarray, bins: float = 4.0) -> int:
-    """Distinct-state counter (paper Fig. 7): the discrete plan structure
-    (assignment vector r, transmitter one-hot, phase) plus coarsely binned
-    budgets - continuous noise dims are excluded so the count reflects
-    genuinely new (assignment x budget-regime) states."""
-    o = np.asarray(obs)
-    discrete = o[3:]  # r, v one-hot, l_M, l_D, phase, n  (skip raw budgets)
-    head = np.round(o[:3] * bins)  # budget/progress coarse bins
-    return hash(tuple(np.round(discrete * bins).astype(np.int64).tolist())
-                + tuple(head.astype(np.int64).tolist()))
+def _pack_obs_keys_np(obs: np.ndarray, bins: float = R.OBS_BINS) -> np.ndarray:
+    """Vectorized distinct-state keys (paper Fig. 7): discretize every
+    observation row with ``round(obs * bins)`` and mix the columns into a
+    uint64 key, all in batched numpy - the previous ``_obs_hash`` built a
+    Python tuple per row (``num_envs * T`` rows per chunk).
+
+    Bit-compatible with the device-side ``rollout.pack_obs_keys`` lanes
+    (``key == (hi << 32) | lo``), and - unlike Python's salted ``hash`` -
+    deterministic across interpreter runs, so checkpointed explored-state
+    sets resume exactly.
+    """
+    q = np.round(np.asarray(obs) * bins).astype(np.int32).astype(np.uint32)
+    prime = np.uint32(R._KEY_PRIME)
+    hi = np.full(q.shape[:-1], R._KEY_BASIS_HI, np.uint32)
+    lo = np.full(q.shape[:-1], R._KEY_BASIS_LO, np.uint32)
+    for d in range(q.shape[-1]):
+        col = q[..., d]
+        hi = (hi ^ col) * prime
+        lo = (lo ^ col) * prime
+    return (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+
+
+def _combine_key_lanes(packed: np.ndarray) -> np.ndarray:
+    """(..., 2) uint32 device key lanes -> (...,) uint64 host keys."""
+    p = np.asarray(packed)
+    return ((p[..., 0].astype(np.uint64) << np.uint64(32))
+            | p[..., 1].astype(np.uint64))
 
 
 @dataclass
@@ -86,22 +105,44 @@ def _sac_example(env: MHSLEnv, cfg: SAC.SACConfig) -> Dict:
 def _chunk_metrics(result: TrainResult, seen: set, traj, ep: int,
                    episodes: int, num_envs: int) -> None:
     """Single device->host transfer per chunk; then per-episode bookkeeping
-    (reward/leak/violation sums + the host-side distinct-state counter)."""
+    (reward/leak/violation sums + the distinct-state counter, computed via
+    the vectorized numpy packing + ``np.unique`` rather than a Python hash
+    loop over every observation row)."""
     host = jax.device_get({
         "obs": traj["obs"],
         "reward": traj["reward"],
         "leak": traj["leak"],
         "viol": traj["viol"],
     })
+    keys = _pack_obs_keys_np(host["obs"])  # (num_envs, T)
     for i in range(num_envs):
         if ep + i >= episodes:
             break
-        for row in host["obs"][i]:
-            seen.add(_obs_hash(row))
+        seen.update(int(k) for k in np.unique(keys[i]))
         result.episode_reward.append(float(host["reward"][i].sum()))
         result.episode_leak.append(float(host["leak"][i].sum()))
         result.episode_violation.append(float(host["viol"][i].sum()))
         result.states_explored.append(len(seen))
+
+
+def _reduced_chunk_metrics(result: TrainResult, seen: set, m, ep: int,
+                           episodes: int, num_envs: int) -> None:
+    """Bookkeeping from a fused train chunk's device-reduced metrics
+    (already on host): per-episode sums are precomputed, observations
+    arrive as packed state keys instead of raw rows."""
+    keys = _combine_key_lanes(m["obs_keys"])  # (num_envs, T)
+    for i in range(num_envs):
+        if ep + i >= episodes:
+            break
+        seen.update(int(k) for k in np.unique(keys[i]))
+        result.episode_reward.append(float(m["reward"][i]))
+        result.episode_leak.append(float(m["leak"][i]))
+        result.episode_violation.append(float(m["viol"][i]))
+        result.states_explored.append(len(seen))
+    if bool(m["did_update"]):
+        result.metrics.append(
+            {k: float(v) for k, v in m["update"].items()}
+        )
 
 
 def train_sac(
@@ -126,11 +167,14 @@ def train_sac(
     the constructor defaults. To train a whole scenario batch in one
     vectorized run, use ``repro.core.scenario.train_population``.
 
-    ``num_envs`` environments run as one vmapped population; each chunk
-    rolls out ``num_envs`` full episodes under a single jitted scan, then
-    runs ``num_envs * episode_len * updates_per_step`` gradient steps in a
-    fused update scan (the same updates-per-env-step ratio as the seed
-    per-step loop). Note the cadence difference vs the seed: updates are
+    ``num_envs`` environments run as one vmapped population; each chunk -
+    the rollout of ``num_envs`` full episodes, the replay write, the
+    ``num_envs * episode_len * updates_per_step`` gradient steps (the same
+    updates-per-env-step ratio as the seed per-step loop, run with the
+    ``cfg.joint_update`` single-backward step by default), and the metric
+    reduction - is ONE buffer-donated jitted call
+    (``rollout.make_train_chunk``). Note the cadence difference vs the
+    seed: updates are
     batched at chunk end with the rollout policy frozen for the episode,
     where the seed interleaved ``updates_per_step`` steps after every env
     step - counts match, training dynamics are the standard batched-RL
@@ -165,15 +209,12 @@ def train_sac(
     opt_state = init_opt(params)
 
     buf = R.buffer_init(cfg.buffer_size, _sac_example(env, cfg))
-    reset_batch = R.make_batched_reset(env)
-    rollout_uniform = R.make_batched_rollout(
-        env, R.uniform_policy(adims), cfg.hist_len
-    )
-    rollout_actor = R.make_batched_rollout(
-        env, R.sac_policy(adims, cfg), cfg.hist_len
-    )
     n_updates = cfg.updates_per_step * env.episode_len * num_envs
-    fused_update = R.make_fused_update(update, cfg.batch, n_updates)
+    chunk = R.make_train_chunk(
+        env, R.uniform_policy(adims), R.sac_policy(adims, cfg), update,
+        hist_len=cfg.hist_len, fields=_SAC_FIELDS, batch_size=cfg.batch,
+        n_updates=n_updates,
+    )
 
     result = TrainResult()
     seen: set = set()
@@ -234,23 +275,22 @@ def train_sac(
         if resample_positions:
             key, reset_key = jax.random.split(key)
         rkeys = R.episode_reset_keys(reset_key, num_envs, resample_positions)
-        key, ksub = jax.random.split(key)
+        key, ksub, ku = jax.random.split(key, 3)
         akeys = jax.random.split(ksub, num_envs)
         rkeys = PD.shard_population(rkeys, mesh, num_envs)
         akeys = PD.shard_population(akeys, mesh, num_envs)
 
-        st0 = reset_batch(rkeys, scenario)
-        rollout = rollout_uniform if ep < warmup_episodes else rollout_actor
-        _, traj = rollout(params, st0, akeys, scenario)
-
-        buf = R.buffer_add(buf, R.flatten_transitions(traj, _SAC_FIELDS))
-        _chunk_metrics(result, seen, traj, ep, episodes, num_envs)
-
-        # warmup rounds UP to chunk granularity: no updates until the chunk
-        # that starts at/past the boundary (exact at num_envs=1)
-        if ep >= warmup_episodes and int(buf.size) >= cfg.batch:
-            key, ku = jax.random.split(key)
-            params, opt_state, _ = fused_update(params, opt_state, buf, ku)
+        # whole chunk (reset/rollout/buffer/updates/metric reduction) in one
+        # buffer-donated dispatch. Warmup rounds UP to chunk granularity: the
+        # traced `train` flag stays False until the chunk that starts
+        # at/past the boundary (exact at num_envs=1), and the update scan is
+        # additionally cond-gated on buffer fill - on device, no size sync.
+        train = jnp.asarray(ep >= warmup_episodes)
+        params, opt_state, buf, metrics = chunk(
+            params, opt_state, buf, rkeys, akeys, ku, train, scenario
+        )
+        _reduced_chunk_metrics(result, seen, jax.device_get(metrics), ep,
+                               episodes, num_envs)
         ep += num_envs
 
     if checkpoint_dir and last_saved != ep:

@@ -72,7 +72,9 @@ def make_ppo_update(action_dims, cfg: PPOConfig):
 
     def loss_fn(params, batch):
         logits = ppo_logits(params, batch["obs"], batch["masks"], action_dims)
-        lp = A.log_prob(logits, batch["action"])
+        # shared per-head log_softmax for log-prob AND entropy (the
+        # separate A.log_prob/A.entropy calls normalized every head twice)
+        lp, ent = A.log_prob_entropy(logits, batch["action"])
         ratio = jnp.exp(lp - batch["logp_old"])
         adv = batch["adv"]
         unclipped = ratio * adv
@@ -80,7 +82,7 @@ def make_ppo_update(action_dims, cfg: PPOConfig):
         pg = -jnp.mean(jnp.minimum(unclipped, clipped))
         v = mlp_apply(params["critic"], batch["obs"])[..., 0]
         vloss = jnp.mean((batch["ret"] - v) ** 2)
-        ent = jnp.mean(A.entropy(logits))
+        ent = jnp.mean(ent)
         return pg + cfg.value_coef * vloss - cfg.entropy_coef * ent, (pg, vloss, ent)
 
     @jax.jit

@@ -310,6 +310,13 @@ def make_batched_reset(env: MHSLEnv):
 # ---------------------------------------------------------------------------
 
 
+def _scan_metric_means(metrics):
+    """Per-metric mean over the scan axis. Reporting only the FINAL step's
+    metrics made the fig-3/4 loss curves single-sample noise; the mean over
+    the chunk's gradient steps is the statistic the curves want."""
+    return jax.tree.map(lambda x: x.mean(axis=0), metrics)
+
+
 def make_fused_update(update_fn, batch_size: int, n_updates: int):
     """Fuse ``n_updates`` off-policy gradient steps into one jitted scan.
 
@@ -318,8 +325,8 @@ def make_fused_update(update_fn, batch_size: int, n_updates: int):
     zero host round-trips between gradient steps.
 
     ``update_fn(params, opt_state, batch) -> (params, opt_state, metrics)``.
-    Returns ``fused(params, opt_state, buf, key)`` -> same triple, with the
-    metrics of the final step.
+    Returns ``fused(params, opt_state, buf, key)`` -> same triple, with
+    each metric averaged over the ``n_updates`` scan steps.
     """
 
     @jax.jit
@@ -337,14 +344,15 @@ def make_fused_update(update_fn, batch_size: int, n_updates: int):
         (params, opt_state), metrics = jax.lax.scan(
             body, (params, opt_state), idx
         )
-        return params, opt_state, jax.tree.map(lambda x: x[-1], metrics)
+        return params, opt_state, _scan_metric_means(metrics)
 
     return fused
 
 
 def make_scan_updates(update_fn, n: int):
     """Run ``n`` update epochs over one fixed batch inside a jitted scan
-    (the on-policy / PPO analogue of ``make_fused_update``)."""
+    (the on-policy / PPO analogue of ``make_fused_update``); metrics come
+    back averaged over the ``n`` epochs."""
 
     @jax.jit
     def run(params, opt_state, batch):
@@ -356,9 +364,169 @@ def make_scan_updates(update_fn, n: int):
         (params, opt_state), metrics = jax.lax.scan(
             body, (params, opt_state), None, length=n
         )
-        return params, opt_state, jax.tree.map(lambda x: x[-1], metrics)
+        return params, opt_state, _scan_metric_means(metrics)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# fused train chunk: reset -> rollout -> buffer add -> updates -> metrics
+# ---------------------------------------------------------------------------
+
+# Discretization bin width for the Fig. 7 distinct-state counter.
+OBS_BINS = 4.0
+
+# Two FNV-1a style 32-bit mixes with different offset bases; their
+# concatenation is an effectively-64-bit state key. uint32 arithmetic only
+# (jax keeps uint64 disabled by default), deterministic across processes -
+# unlike Python's salted str/bytes hashes - so checkpointed explored-state
+# sets resume exactly in a fresh interpreter.
+_KEY_PRIME = 16777619
+_KEY_BASIS_HI = 0x811C9DC5
+_KEY_BASIS_LO = 0x9E3779B9
+
+
+def pack_obs_keys(obs: Array, bins: float = OBS_BINS) -> Array:
+    """Pack discretized observations into per-row state keys on device.
+
+    ``obs`` (..., D) float -> (..., 2) uint32: each observation row is
+    binned with ``round(obs * bins)`` (the Fig. 7 discretization) and
+    mixed column-by-column into two independent 32-bit lanes. The host
+    counterpart ``loops._pack_obs_keys_np`` produces bit-identical lanes,
+    so device-reduced and host-hashed explored-state sets interoperate.
+    """
+    q = jnp.round(obs * bins).astype(jnp.int32).astype(jnp.uint32)
+    prime = jnp.uint32(_KEY_PRIME)
+
+    def mix(basis: int) -> Array:
+        h = jnp.full(q.shape[:-1], basis, jnp.uint32)
+        for d in range(q.shape[-1]):
+            h = (h ^ q[..., d]) * prime
+        return h
+
+    return jnp.stack([mix(_KEY_BASIS_HI), mix(_KEY_BASIS_LO)], axis=-1)
+
+
+def make_train_chunk(
+    env: MHSLEnv,
+    explore_policy: Policy,
+    train_policy: Policy,
+    update_fn,
+    *,
+    hist_len: int,
+    fields: Tuple[str, ...],
+    batch_size: int,
+    n_updates: int,
+):
+    """ONE jitted, buffer-donated call for a whole training chunk.
+
+    Fuses what ``loops.train_sac`` previously issued as three separate
+    dispatches plus two host round-trips per chunk::
+
+        reset -> episode rollout (explore or train policy, lax.cond on the
+        traced ``train`` flag) -> ring-buffer write -> n_updates fused
+        update scan (lax.cond-gated on warmup AND buffer fill, so there is
+        no per-chunk ``int(buf.size)`` host sync) -> on-device metric
+        reduction (per-episode reward/leak/violation sums + packed
+        discretized-obs keys for the Fig. 7 counter).
+
+    Returns ``chunk(params, opt_state, buf, rkeys, akeys, ukey, train,
+    scenario=None) -> (params, opt_state, buf, metrics)`` where ``train``
+    is a TRACED bool (warmup chunks pass False) and ``metrics`` is::
+
+        {"reward"|"leak"|"viol": (num_envs,) episode sums,
+         "obs_keys": (num_envs, T, 2) uint32 packed state keys,
+         "update": per-metric means over the update scan (zeros when the
+                   chunk did not update), "did_update": bool}
+
+    The buffer storage is donated on backends that implement donation
+    (in-place ring writes, no copy per chunk); all other state flows
+    through untouched. The wrapper exposes ``.fn`` (the untraced body -
+    ``scenario.train_population`` vmaps it over the scenario axis),
+    ``.jitted``, and ``.trace_count`` for recompile audits. Because the
+    warmup flag, PRNG keys, buffer contents, and ``ScenarioParams`` are
+    all runtime values, a full run - warmup through training, across any
+    scenario sweep - compiles the chunk exactly once.
+    """
+    one_explore = make_episode_rollout(env, explore_policy, hist_len)
+    one_train = make_episode_rollout(env, train_policy, hist_len)
+    trace_count = [0]
+
+    def fn(params, opt_state, buf: BufferState, rkeys, akeys, ukey, train,
+           sp):
+        trace_count[0] += 1  # executes only while (re)tracing
+        st0 = jax.vmap(env.reset, in_axes=(0, None))(rkeys, sp)
+
+        def roll(one):
+            def run(_):
+                return jax.vmap(one, in_axes=(None, 0, 0, None))(
+                    params, st0, akeys, sp
+                )
+
+            return run
+
+        # both policies record identical trajectory structures, so the
+        # traced warmup flag selects the branch without retracing
+        _, traj = jax.lax.cond(train, roll(one_train), roll(one_explore),
+                               None)
+        buf = _buffer_add(buf, flatten_transitions(traj, fields))
+
+        def run_updates(carry):
+            params, opt_state = carry
+            idx = jax.random.randint(
+                ukey, (n_updates, batch_size), 0, jnp.maximum(buf.size, 1)
+            )
+
+            def body(c, idx_row):
+                p, o = c
+                p, o, m = update_fn(p, o, buffer_gather(buf, idx_row))
+                return (p, o), m
+
+            (params, opt_state), ms = jax.lax.scan(
+                body, (params, opt_state), idx
+            )
+            return params, opt_state, _scan_metric_means(ms)
+
+        # metric structure for the skip branches (abstract - no FLOPs)
+        m_shape = jax.eval_shape(run_updates, (params, opt_state))[2]
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shape)
+
+        def skip(carry):
+            return carry[0], carry[1], zeros
+
+        def maybe_update(carry):
+            # inner gate on buffer fill; under a scenario vmap this pred is
+            # mapped (per-lane buffers) and lowers to a select, while the
+            # outer scalar warmup cond still skips update work entirely
+            return jax.lax.cond(buf.size >= batch_size, run_updates, skip,
+                                carry)
+
+        params, opt_state, upd = jax.lax.cond(
+            train, maybe_update, skip, (params, opt_state)
+        )
+        metrics = {
+            "reward": traj["reward"].sum(axis=1),
+            "leak": traj["leak"].sum(axis=1),
+            "viol": traj["viol"].sum(axis=1),
+            "obs_keys": pack_obs_keys(traj["obs"]),
+            "update": upd,
+            "did_update": train & (buf.size >= batch_size),
+        }
+        return params, opt_state, buf, metrics
+
+    donate: Tuple[int, ...] = (2,) if jax.default_backend() != "cpu" else ()
+    jitted = jax.jit(fn, donate_argnums=donate)
+    default_sp = env.scenario()
+
+    def chunk(params, opt_state, buf, rkeys, akeys, ukey, train,
+              scenario=None):
+        return jitted(params, opt_state, buf, rkeys, akeys, ukey, train,
+                      default_sp if scenario is None else scenario)
+
+    chunk.fn = fn
+    chunk.jitted = jitted
+    chunk.trace_count = trace_count
+    return chunk
 
 
 def gae(rewards: Array, values: Array, gamma: float, lam: float):

@@ -21,7 +21,11 @@ import numpy as np
 
 from repro.core.agents import action_space as A
 from repro.core.agents import icm as ICM
-from repro.core.agents.attention import cross_attention, init_cross_attention
+from repro.core.agents.attention import (
+    cross_attention,
+    cross_attention_slim,
+    init_cross_attention,
+)
 from repro.nn import init_mlp, mlp_apply
 from repro.optim import adamw
 from repro.optim.optimizers import apply_updates
@@ -45,6 +49,17 @@ class SACConfig:
     updates_per_step: int = 2
     use_icm: bool = True
     use_ca: bool = True
+    # single-backward joint update: shared critic/ICM forwards, one
+    # value_and_grad over the whole (actor, critic, icm) pytree with
+    # stop_gradient routing. False restores the seed's sequential
+    # three-backward path (critic, then actor against the *updated*
+    # critic's advantage values, then ICM).
+    joint_update: bool = True
+    # cross-attention implementation for batched actor forwards:
+    # "ref" = agents.attention.cross_attention, "pallas" = the fused
+    # kernels.ca_attention kernel (unbatched/vmapped call sites always
+    # use the reference path).
+    ca_impl: str = "ref"
 
 
 def init_agent(key, obs_dim: int, action_dims: Dict[str, int], cfg: SACConfig):
@@ -82,14 +97,25 @@ def _split_heads(raw, action_dims):
     }
 
 
-def actor_logits(params, obs, hist, hist_mask, masks, action_dims, cfg: SACConfig):
-    if cfg.use_ca:
-        x = cross_attention(params["actor"]["ca"], obs, hist, hist_mask)
-    else:
-        x = obs
+def _head_logits(params, x, masks, action_dims):
+    """Trunk -> heads -> masked factored logits (shared by every actor
+    forward so the head architecture lives in one place)."""
     h = mlp_apply(params["actor"]["trunk"], x, final_act=jax.nn.relu)
     raw = mlp_apply(params["actor"]["heads"], h)
     return A.masked_logits(_split_heads(raw, action_dims), masks)
+
+
+def actor_logits(params, obs, hist, hist_mask, masks, action_dims, cfg: SACConfig):
+    if cfg.use_ca:
+        if cfg.ca_impl == "pallas" and obs.ndim == 2:
+            from repro.kernels.ca_attention import ca_attention
+
+            x = ca_attention(params["actor"]["ca"], obs, hist, hist_mask)
+        else:
+            x = cross_attention(params["actor"]["ca"], obs, hist, hist_mask)
+    else:
+        x = obs
+    return _head_logits(params, x, masks, action_dims)
 
 
 def critic_v(params, obs):
@@ -99,12 +125,156 @@ def critic_v(params, obs):
 # ---------------------------------------------------------------------------
 # update step
 # ---------------------------------------------------------------------------
+#
+# Loss semantics shared by both paths (Eqs. 22-23, 25-29):
+#   critic  - TD regression onto r_total + gamma (1-d) sg[V(s')]
+#   actor   - policy gradient on the fully stop-gradiented TD advantage
+#             plus entropy, so actor grads never leak into the critic
+#   icm     - L_F + v L_I; r_c is stop-gradiented inside icm_losses, so
+#             r_total is a constant w.r.t. every parameter
+#
+# Because each loss term touches exactly one parameter subtree once the
+# stop_gradients are in place, one backward over the SUMMED loss yields
+# the same per-head gradients as three separate backwards at the same
+# parameter point. The only semantic difference of the joint path is
+# advantage freshness: the sequential path evaluates the actor's
+# advantage VALUES against the critic it just updated, the joint path
+# against the chunk-start critic (one eta_c Adam step apart).
+
+
+def bounded_reward(reward, r_c, cfg: SACConfig):
+    """r_total = reward + zeta tanh(R_C) (Eq. 23 with the bonus bounded:
+    raw 0.5*||phi-phi_hat||^2 can reach feat_dim/2 >> |env reward| and
+    swamp the leakage signal)."""
+    return reward + cfg.zeta * jnp.tanh(r_c)
+
+
+def intrinsic_reward(icm_params, batch, action_dims, cfg: SACConfig):
+    """(r_total, r_c, l_i, l_f) with ONE ICM forward (Eqs. 22-23, 25-26).
+
+    ``r_c`` (and therefore ``r_total``) carries no gradient: ``icm_losses``
+    stop-gradients both feature embeddings inside R_C."""
+    avec = A.onehot(batch["action"], action_dims)
+    l_i, l_f, r_c = ICM.icm_losses(
+        icm_params, batch["obs"], batch["obs_next"], batch["action"], avec,
+        action_dims,
+    )
+    return bounded_reward(batch["reward"], r_c, cfg), r_c, l_i, l_f
+
+
+def joint_loss(params, batch, action_dims, cfg: SACConfig):
+    """Single scalar whose one backward reproduces all three heads' grads.
+
+    Shared forwards, restructured for minimal dispatch on the hot path:
+
+    * ``obs`` and ``obs_next`` ride ONE stacked ``(2B, ...)`` forward
+      through the critic and the ICM feature extractor (the sequential
+      path runs each network twice per loss, and the critic nets appear
+      in both the critic and actor losses - four critic forwards total);
+    * the ICM runs once for r_c AND its own loss (the sequential path
+      runs it once outside the grad and once inside);
+    * the CA actor uses ``cross_attention_slim`` - only the current-state
+      query row, whose gradients are identical to the reference (the
+      history-query rows never reach the actor output, so ``wq_h``'s
+      gradient is exactly zero either way);
+    * log-prob and entropy share one log_softmax per action head.
+    """
+    b = batch["obs"].shape[0]
+    both = jnp.concatenate([batch["obs"], batch["obs_next"]], axis=0)
+    v_both = critic_v(params, both)
+    v, v_next = v_both[:b], v_both[b:]
+
+    if cfg.use_icm:
+        avec = A.onehot(batch["action"], action_dims)
+        phi_both = ICM.features(params["icm"], both)
+        phi, phi_next = phi_both[:b], phi_both[b:]
+        phi_hat = ICM.forward_model(params["icm"], phi, avec)
+        l_f = 0.5 * jnp.sum(
+            (phi_hat - jax.lax.stop_gradient(phi_next)) ** 2, -1
+        ).mean()
+        inv = ICM.inverse_logits(params["icm"], phi, phi_next, action_dims)
+        l_i = (-A.log_prob(inv, batch["action"])).mean()
+        r_c = 0.5 * jnp.sum(
+            (jax.lax.stop_gradient(phi_hat)
+             - jax.lax.stop_gradient(phi_next)) ** 2, -1
+        )
+        r_total = bounded_reward(batch["reward"], r_c, cfg)
+    else:
+        r_c = jnp.zeros_like(batch["reward"])
+        r_total = batch["reward"]
+
+    td = r_total + cfg.gamma * (1.0 - batch["done"]) * v_next
+    lc = jnp.mean((r_total + cfg.gamma * (1.0 - batch["done"])
+                   * jax.lax.stop_gradient(v_next) - v) ** 2)
+
+    if cfg.use_ca:
+        if cfg.ca_impl == "pallas":
+            from repro.kernels.ca_attention import ca_attention
+
+            x = ca_attention(params["actor"]["ca"], batch["obs"],
+                             batch["hist"], batch["hist_mask"])
+        else:
+            x = cross_attention_slim(params["actor"]["ca"], batch["obs"],
+                                     batch["hist"], batch["hist_mask"])
+    else:
+        x = batch["obs"]
+    logits = _head_logits(params, x, batch["masks"], action_dims)
+    lp, ent = A.log_prob_entropy(logits, batch["action"])
+    y = jax.lax.stop_gradient(td - v)
+    la = -jnp.mean(lp * y + cfg.alpha * ent)
+
+    total = lc + la
+    metrics = {"critic_loss": lc, "actor_loss": la, "r_c": r_c.mean()}
+    if cfg.use_icm:
+        total = total + l_f + cfg.v_inv * l_i
+        metrics.update(icm_inv_loss=l_i, icm_fwd_loss=l_f)
+    return total, metrics
 
 
 def make_update(action_dims, cfg: SACConfig):
+    """``update(params, opt_state, batch) -> (params, opt_state, metrics)``.
+
+    ``cfg.joint_update`` selects the single-backward joint update (shared
+    forwards, one ``value_and_grad`` over the full parameter pytree);
+    ``False`` keeps the seed's sequential three-backward path bit-for-bit.
+    Optimizer-state layout ({actor, critic, icm} AdamW triples) is
+    identical for both, so checkpoints are interchangeable."""
     opt_a = adamw(cfg.eta_a)
     opt_c = adamw(cfg.eta_c)
     opt_i = adamw(cfg.eta_icm)
+
+    def init_opt(params):
+        return {
+            "actor": opt_a.init(params["actor"]),
+            "critic": opt_c.init(params["critic"]),
+            "icm": opt_i.init(params["icm"]) if cfg.use_icm else (),
+        }
+
+    if cfg.joint_update:
+
+        @jax.jit
+        def update(params, opt_state, batch):
+            (_, metrics), grads = jax.value_and_grad(
+                joint_loss, has_aux=True
+            )(params, batch, action_dims, cfg)
+            ua, oa = opt_a.update(grads["actor"], opt_state["actor"],
+                                  params["actor"])
+            uc, oc = opt_c.update(grads["critic"], opt_state["critic"],
+                                  params["critic"])
+            new_params = dict(params)
+            new_params["actor"] = apply_updates(params["actor"], ua)
+            new_params["critic"] = apply_updates(params["critic"], uc)
+            new_opt = {"actor": oa, "critic": oc}
+            if cfg.use_icm:
+                ui, oi = opt_i.update(grads["icm"], opt_state["icm"],
+                                      params["icm"])
+                new_params["icm"] = apply_updates(params["icm"], ui)
+                new_opt["icm"] = oi
+            else:
+                new_opt["icm"] = opt_state["icm"]
+            return new_params, new_opt, metrics
+
+        return update, init_opt
 
     def loss_critic(critic_params, params, batch, r_total):
         p = dict(params)
@@ -147,9 +317,7 @@ def make_update(action_dims, cfg: SACConfig):
                 params["icm"], batch["obs"], batch["obs_next"], batch["action"],
                 avec, action_dims,
             )
-            # bound the curiosity bonus (raw 0.5*||phi-phi_hat||^2 can reach
-            # feat_dim/2 >> |env reward| and swamp the leakage signal)
-            r_total = batch["reward"] + cfg.zeta * jnp.tanh(r_c)
+            r_total = bounded_reward(batch["reward"], r_c, cfg)
         else:
             r_c = jnp.zeros_like(batch["reward"])
             r_total = batch["reward"]
@@ -178,13 +346,6 @@ def make_update(action_dims, cfg: SACConfig):
         else:
             new_opt["icm"] = opt_state["icm"]
         return params, new_opt, metrics
-
-    def init_opt(params):
-        return {
-            "actor": opt_a.init(params["actor"]),
-            "critic": opt_c.init(params["critic"]),
-            "icm": opt_i.init(params["icm"]) if cfg.use_icm else (),
-        }
 
     return update, init_opt
 

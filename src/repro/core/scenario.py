@@ -88,22 +88,26 @@ def scenario_from_net(
     them explicitly via ``scenario_grid``.
     """
     e = net.num_eaves
+    # every leaf carries an explicit (strong) dtype: weak-typed python
+    # scalars would make `scenario=None` default-path traces incompatible
+    # with explicit sweep scenarios and silently retrace the engine
     return ScenarioParams(
         monitor_prob=jnp.full((e,), net.monitor_prob, jnp.float32),
         eave_mask=jnp.ones((e,), jnp.float32),
-        know_eave_locations=jnp.asarray(1.0 if know_eave_locations else 0.0),
-        gamma_t=jnp.asarray(net.gamma_t),
-        gamma_e=jnp.asarray(net.gamma_e),
-        bandwidth_hz=jnp.asarray(net.bandwidth_hz),
-        noise_w=jnp.asarray(net.noise_w),
-        rayleigh_o=jnp.asarray(net.rayleigh_o),
-        power_levels=jnp.asarray(net.power_levels),
-        leak_scale=jnp.asarray(leak_scale),
-        area_m=jnp.asarray(net.area_m),
-        f_cpu_hz=jnp.asarray(net.f_cpu_hz),
-        theta_chip=jnp.asarray(net.theta_chip),
-        lambda_f=jnp.asarray(1.0),
-        lambda_b=jnp.asarray(1.0),
+        know_eave_locations=jnp.asarray(
+            1.0 if know_eave_locations else 0.0, jnp.float32),
+        gamma_t=jnp.asarray(net.gamma_t, jnp.float32),
+        gamma_e=jnp.asarray(net.gamma_e, jnp.float32),
+        bandwidth_hz=jnp.asarray(net.bandwidth_hz, jnp.float32),
+        noise_w=jnp.asarray(net.noise_w, jnp.float32),
+        rayleigh_o=jnp.asarray(net.rayleigh_o, jnp.float32),
+        power_levels=jnp.asarray(net.power_levels, jnp.float32),
+        leak_scale=jnp.asarray(leak_scale, jnp.float32),
+        area_m=jnp.asarray(net.area_m, jnp.float32),
+        f_cpu_hz=jnp.asarray(net.f_cpu_hz, jnp.float32),
+        theta_chip=jnp.asarray(net.theta_chip, jnp.float32),
+        lambda_f=jnp.asarray(1.0, jnp.float32),
+        lambda_b=jnp.asarray(1.0, jnp.float32),
     )
 
 
@@ -340,7 +344,7 @@ def train_population(env, cfg, scenarios: ScenarioParams, *,
     from repro.core.agents import rollout as R
     from repro.core.agents import sac as SAC
     from repro.core.agents.loops import (
-        TrainResult, _chunk_metrics, _sac_example, _SAC_FIELDS,
+        TrainResult, _reduced_chunk_metrics, _sac_example, _SAC_FIELDS,
     )
     from repro.distribution import population as PD
 
@@ -357,25 +361,22 @@ def train_population(env, cfg, scenarios: ScenarioParams, *,
     opt_state = jax.vmap(init_opt)(params)
 
     buf = _stack_like(R.buffer_init(cfg.buffer_size, _sac_example(env, cfg)), n)
-    # donate the stacked buffer storage where XLA supports it (same
-    # rationale as rollout.buffer_add: in-place ring writes on
-    # accelerators, no donation on CPU where it is unimplemented)
-    donate = (0,) if jax.default_backend() != "cpu" else ()
-    vm_add = jax.jit(jax.vmap(R._buffer_add), donate_argnums=donate)
-    rollout_uniform = make_population_rollout(
-        env, R.uniform_policy(adims), cfg.hist_len, share_params=False)
-    rollout_actor = make_population_rollout(
-        env, R.sac_policy(adims, cfg), cfg.hist_len, share_params=False)
     n_updates = cfg.updates_per_step * env.episode_len * num_envs
-    fused = R.make_fused_update(update, cfg.batch, n_updates)
-    vm_fused = jax.jit(jax.vmap(fused))
-
-    def _flatten(traj):
-        sub = {k: traj[k] for k in _SAC_FIELDS}
-        return jax.tree.map(
-            lambda x: x.reshape((n, x.shape[1] * x.shape[2]) + x.shape[3:]),
-            sub,
-        )
+    # the fused train chunk vmapped over the scenario axis: params /
+    # optimizer state / buffers / update keys / scenarios are mapped, the
+    # shared chunk keys and warmup flag are broadcast. The stacked buffer
+    # storage is donated where XLA supports it (in-place ring writes on
+    # accelerators; CPU does not implement donation).
+    chunk = R.make_train_chunk(
+        env, R.uniform_policy(adims), R.sac_policy(adims, cfg), update,
+        hist_len=cfg.hist_len, fields=_SAC_FIELDS, batch_size=cfg.batch,
+        n_updates=n_updates,
+    )
+    donate = (2,) if jax.default_backend() != "cpu" else ()
+    vm_chunk = jax.jit(
+        jax.vmap(chunk.fn, in_axes=(0, 0, 0, None, None, 0, None, 0)),
+        donate_argnums=donate,
+    )
 
     pop = PopulationResult(results=[TrainResult() for _ in range(n)])
     seen: List[set] = [set() for _ in range(n)]
@@ -436,29 +437,28 @@ def train_population(env, cfg, scenarios: ScenarioParams, *,
         if resample_positions:
             key, reset_key = jax.random.split(key)
         rkeys = R.episode_reset_keys(reset_key, num_envs, resample_positions)
-        key, ksub = jax.random.split(key)
+        key, ksub, ku = jax.random.split(key, 3)
         akeys = jax.random.split(ksub, num_envs)
         rkeys = PD.replicate(rkeys, mesh)
         akeys = PD.replicate(akeys, mesh)
+        ukeys = PD.shard_population(jax.random.split(ku, n), mesh, n)
 
-        rollout = rollout_uniform if ep < warmup_episodes else rollout_actor
-        _, traj = rollout(params, rkeys, akeys, scenarios)
-
-        buf = vm_add(buf, _flatten(traj))
-        # one device->host transfer for all scenarios (all-gathering the
-        # scenario shards), then the standard per-episode bookkeeping on
-        # each scenario's numpy slice
-        host = jax.device_get({k: traj[k] for k in ("obs", "reward", "leak",
-                                                    "viol")})
+        # every scenario's full chunk cycle in ONE buffer-donated dispatch;
+        # the traced warmup flag and per-lane buffer-fill gate replace the
+        # host-side `int(buf.size[0])` sync
+        train = jnp.asarray(ep >= warmup_episodes)
+        params, opt_state, buf, metrics = vm_chunk(
+            params, opt_state, buf, rkeys, akeys, ukeys, train, scenarios
+        )
+        # one device->host transfer of the reduced metrics for all
+        # scenarios (all-gathering the scenario shards), then per-episode
+        # bookkeeping on each scenario's slice
+        host = jax.device_get(metrics)
         for s in range(n):
-            _chunk_metrics(pop.results[s], seen[s],
-                           {k: host[k][s] for k in host},
-                           ep, episodes, num_envs)
-
-        if ep >= warmup_episodes and int(buf.size[0]) >= cfg.batch:
-            key, ku = jax.random.split(key)
-            ukeys = PD.shard_population(jax.random.split(ku, n), mesh, n)
-            params, opt_state, _ = vm_fused(params, opt_state, buf, ukeys)
+            _reduced_chunk_metrics(
+                pop.results[s], seen[s],
+                jax.tree.map(lambda x: x[s], host), ep, episodes, num_envs,
+            )
         ep += num_envs
 
     if checkpoint_dir and last_saved != ep:

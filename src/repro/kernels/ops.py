@@ -3,7 +3,8 @@
 On this CPU container ``interpret=True`` executes the kernel bodies in
 Python for correctness validation; on TPU pass ``interpret=False``.
 """
+from repro.kernels.ca_attention import ca_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
-__all__ = ["flash_attention", "ssd_scan"]
+__all__ = ["ca_attention", "flash_attention", "ssd_scan"]

@@ -114,6 +114,33 @@ def test_cross_attention_masked_history():
     np.testing.assert_allclose(np.asarray(out1[obs_dim:]), np.asarray(want), rtol=1e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_cross_attention_low_precision_dtypes(dtype):
+    """Masking must use a dtype-aware sentinel: the old -1e9 literal
+    overflows fp16 to -inf, which NaNs the softmax as soon as a row is
+    fully masked. Pins finite outputs + agreement with the fp32 path."""
+    obs_dim, pair_dim, I = 10, 14, 4
+    p32 = init_cross_attention(jax.random.PRNGKey(0), obs_dim, pair_dim,
+                               attn_dim=8)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (obs_dim,))
+    hist = jax.random.normal(jax.random.PRNGKey(2), (I, pair_dim))
+    ref_partial = np.asarray(
+        cross_attention(p32, obs, hist, jnp.array([0.0, 1.0, 0.0, 1.0])))
+
+    p = jax.tree.map(lambda x: x.astype(dtype), p32)
+    obs_l, hist_l = obs.astype(dtype), hist.astype(dtype)
+    for mask in (jnp.zeros((I,)), jnp.ones((I,)),
+                 jnp.array([0.0, 1.0, 0.0, 1.0])):
+        out = np.asarray(cross_attention(p, obs_l, hist_l,
+                                         mask.astype(dtype)), np.float32)
+        assert np.isfinite(out).all(), (dtype, np.asarray(mask))
+    np.testing.assert_allclose(
+        np.asarray(cross_attention(p, obs_l, hist_l,
+                                   jnp.array([0.0, 1.0, 0.0, 1.0],
+                                             dtype)), np.float32),
+        ref_partial, atol=0.15)
+
+
 def test_sac_update_runs_and_reduces_critic_loss(env):
     dims = env.action_dims
     cfg = SAC.SACConfig(hidden=32, feat_dim=8, attn_dim=8, batch=16)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import flash_attention, ssd_scan
+from repro.kernels.ops import ca_attention, flash_attention, ssd_scan
 from repro.kernels.ref import flash_attention_ref, ssd_scan_ref
 
 FLASH_SHAPES = [
@@ -68,6 +68,87 @@ def test_ssd_scan_sweep(shape):
     yr, hr = ssd_scan_ref(x, dt, a, bm, cm, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4)
     np.testing.assert_allclose(np.asarray(hL), np.asarray(hr), atol=5e-4)
+
+
+CA_SHAPES = [
+    # (batch, obs_dim, pair_dim, I, attn_dim, blk)
+    (1, 10, 14, 4, 8, 128),
+    (7, 25, 51, 4, 64, 4),  # ragged batch, tiny blocks
+    (128, 25, 51, 4, 64, 128),
+    (130, 16, 32, 8, 32, 64),  # ragged vs block size, longer history
+]
+
+
+@pytest.mark.parametrize("shape", CA_SHAPES)
+def test_ca_attention_matches_reference(shape):
+    """The fused Pallas CA kernel reproduces agents.attention's
+    cross_attention (current-state row) on CPU interpret mode, including
+    all-masked rows and partial histories."""
+    from repro.core.agents.attention import cross_attention, init_cross_attention
+
+    b, obs_dim, pair_dim, i, c, blk = shape
+    params = init_cross_attention(jax.random.PRNGKey(0), obs_dim, pair_dim, c)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    obs = jax.random.normal(ks[0], (b, obs_dim))
+    hist = jax.random.normal(ks[1], (b, i, pair_dim))
+    mask = (jax.random.uniform(ks[2], (b, i)) > 0.4).astype(jnp.float32)
+    mask = mask.at[0].set(0.0)  # row with no history -> zero summary
+
+    ref = jax.vmap(lambda o, h, m: cross_attention(params, o, h, m))(
+        obs, hist, mask)
+    out = ca_attention(params, obs, hist, mask, blk=blk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[0, obs_dim:]), 0.0, atol=1e-7)
+
+
+def test_ca_attention_grads_match_reference():
+    """The kernel's custom VJP (slim-reference backward) reproduces the
+    full reference's gradients - including wq_h's exact zero."""
+    from repro.core.agents.attention import cross_attention, init_cross_attention
+
+    b, obs_dim, pair_dim, i, c = 16, 12, 20, 4, 16
+    params = init_cross_attention(jax.random.PRNGKey(0), obs_dim, pair_dim, c)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (b, obs_dim))
+    hist = jax.random.normal(jax.random.PRNGKey(2), (b, i, pair_dim))
+    mask = (jax.random.uniform(jax.random.PRNGKey(3), (b, i)) > 0.3
+            ).astype(jnp.float32)
+    tgt = jax.random.normal(jax.random.PRNGKey(4), (b, obs_dim + c))
+
+    def loss_kernel(p):
+        return jnp.sum((ca_attention(p, obs, hist, mask) - tgt) ** 2)
+
+    def loss_ref(p):
+        out = jax.vmap(lambda o, h, m: cross_attention(p, o, h, m))(
+            obs, hist, mask)
+        return jnp.sum((out - tgt) ** 2)
+
+    gk = jax.grad(loss_kernel)(params)
+    gr = jax.grad(loss_ref)(params)
+    for name in ("wq_s", "wk", "wv", "wq_h"):
+        np.testing.assert_allclose(np.asarray(gk[name]), np.asarray(gr[name]),
+                                   atol=2e-4, rtol=2e-4, err_msg=name)
+    np.testing.assert_array_equal(np.asarray(gk["wq_h"]), 0.0)
+
+
+def test_ca_attention_low_precision_mask_safe():
+    """The kernel's finfo-based masking survives fp16/bf16 scores (a -1e9
+    literal overflows fp16 to -inf and NaNs fully-masked rows)."""
+    from repro.core.agents.attention import init_cross_attention
+
+    b, obs_dim, pair_dim, i, c = 9, 12, 20, 4, 16
+    params = init_cross_attention(jax.random.PRNGKey(0), obs_dim, pair_dim, c)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (b, obs_dim))
+    hist = jax.random.normal(jax.random.PRNGKey(2), (b, i, pair_dim))
+    mask = jnp.zeros((b, i)).at[1:, :2].set(1.0)
+    ref = np.asarray(ca_attention(params, obs, hist, mask))
+    for dtype in (jnp.bfloat16, jnp.float16):
+        cast = jax.tree.map(lambda x: x.astype(dtype), params)
+        out = ca_attention(cast, obs.astype(dtype), hist.astype(dtype),
+                           mask.astype(dtype))
+        out = np.asarray(out, np.float32)
+        assert np.isfinite(out).all(), dtype
+        np.testing.assert_allclose(out, ref, atol=0.15)
 
 
 def test_model_attention_pallas_path():

@@ -1,0 +1,309 @@
+"""Update hot-path tests: joint single-backward SAC update parity, fused
+train-chunk semantics, scan-metric means, vectorized distinct-state keys,
+and the recompile audit for the fused chunk.
+
+Joint-update tolerance contract (documented): with ``joint_update=True``
+all three heads' gradients are computed by ONE backward at the SAME
+parameter point, so they must match the sequential path's per-loss
+gradients to float-reassociation tolerance (rtol 2e-5). After applying
+one optimizer step, critic and ICM parameters agree to the same
+tolerance; ACTOR parameters differ by the advantage-freshness semantics
+(the sequential path re-evaluates the stop-gradiented advantage against
+the critic it just moved by one ``eta_c`` Adam step), bounded here by
+5e-4 absolute - a few actor-lr quanta.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.agents import action_space as A
+from repro.core.agents import icm as ICM
+from repro.core.agents import rollout as R
+from repro.core.agents import sac as SAC
+from repro.core.agents.loops import _pack_obs_keys_np, _sac_example, _SAC_FIELDS
+from repro.core.env import MHSLEnv
+from repro.core.profiles import resnet101_profile
+from repro.core.scenario import replace_param
+
+
+@pytest.fixture(scope="module")
+def env():
+    return MHSLEnv(profile=resnet101_profile(batch=1))
+
+
+def _real_batch(env, cfg, n_episodes=4, batch_key=9):
+    """A replay batch drawn from real uniform-policy transitions."""
+    params = SAC.init_agent(jax.random.PRNGKey(0), env.obs_dim,
+                            env.action_dims, cfg)
+    buf = R.buffer_init(512, _sac_example(env, cfg))
+    rollout = R.make_batched_rollout(env, R.uniform_policy(env.action_dims),
+                                     cfg.hist_len)
+    st0 = R.make_batched_reset(env)(
+        jax.random.split(jax.random.PRNGKey(5), n_episodes))
+    _, traj = rollout(params, st0,
+                      jax.random.split(jax.random.PRNGKey(6), n_episodes))
+    buf = R.buffer_add(buf, R.flatten_transitions(traj, _SAC_FIELDS))
+    return params, buf, R.buffer_sample(buf, jax.random.PRNGKey(batch_key),
+                                        cfg.batch)
+
+
+def _tree_allclose(a, b, rtol=2e-5, atol=1e-6):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=rtol, atol=atol
+        ),
+        a, b,
+    )
+
+
+@pytest.mark.parametrize("use_icm,use_ca", [(True, True), (False, True),
+                                            (True, False), (False, False)])
+def test_joint_grads_match_per_loss_grads(env, use_icm, use_ca):
+    """The single backward over joint_loss reproduces each head's gradient
+    as computed by an independent backward of its own loss at the SAME
+    parameter point - i.e. the stop_gradient routing leaks nothing."""
+    dims = env.action_dims
+    cfg = SAC.SACConfig(hidden=32, feat_dim=8, attn_dim=8, batch=16,
+                        use_icm=use_icm, use_ca=use_ca)
+    params, _, batch = _real_batch(env, cfg)
+
+    (_, metrics), gj = jax.value_and_grad(SAC.joint_loss, has_aux=True)(
+        params, batch, dims, cfg
+    )
+    if use_icm:
+        r_total, _, _, _ = SAC.intrinsic_reward(params["icm"], batch, dims,
+                                                cfg)
+    else:
+        r_total = batch["reward"]
+
+    def loss_critic(critic_params):
+        p = dict(params)
+        p["critic"] = critic_params
+        v = SAC.critic_v(p, batch["obs"])
+        v_next = jax.lax.stop_gradient(SAC.critic_v(p, batch["obs_next"]))
+        target = r_total + cfg.gamma * (1.0 - batch["done"]) * v_next
+        return jnp.mean((target - v) ** 2)
+
+    def loss_actor(actor_params):
+        p = dict(params)
+        p["actor"] = actor_params
+        logits = SAC.actor_logits(p, batch["obs"], batch["hist"],
+                                  batch["hist_mask"], batch["masks"], dims,
+                                  cfg)
+        lp = A.log_prob(logits, batch["action"])
+        ent = A.entropy(logits)
+        v = SAC.critic_v(p, batch["obs"])
+        v_next = SAC.critic_v(p, batch["obs_next"])
+        y = jax.lax.stop_gradient(
+            r_total + cfg.gamma * (1.0 - batch["done"]) * v_next - v
+        )
+        return -jnp.mean(lp * y + cfg.alpha * ent)
+
+    lc, gc = jax.value_and_grad(loss_critic)(params["critic"])
+    la, ga = jax.value_and_grad(loss_actor)(params["actor"])
+    _tree_allclose(gj["critic"], gc)
+    _tree_allclose(gj["actor"], ga)
+    np.testing.assert_allclose(float(metrics["critic_loss"]), float(lc),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(metrics["actor_loss"]), float(la),
+                               rtol=1e-6)
+
+    if use_icm:
+        def loss_icm(icm_params):
+            avec = A.onehot(batch["action"], dims)
+            l_i, l_f, _ = ICM.icm_losses(icm_params, batch["obs"],
+                                         batch["obs_next"], batch["action"],
+                                         avec, dims)
+            return l_f + cfg.v_inv * l_i
+
+        _, gi = jax.value_and_grad(loss_icm)(params["icm"])
+        _tree_allclose(gj["icm"], gi)
+    else:
+        assert "icm" not in gj
+
+
+def test_joint_update_step_matches_sequential(env):
+    """One update step: critic/ICM land on the same parameters as the
+    sequential path (same grads, same optimizer); the actor agrees to the
+    documented advantage-freshness tolerance; shared-metric values match
+    except actor_loss (evaluated pre- vs post-critic-step)."""
+    dims = env.action_dims
+    cfg_j = SAC.SACConfig(hidden=32, feat_dim=8, attn_dim=8, batch=16)
+    cfg_s = SAC.SACConfig(hidden=32, feat_dim=8, attn_dim=8, batch=16,
+                          joint_update=False)
+    params, _, batch = _real_batch(env, cfg_j)
+
+    upd_j, init_j = SAC.make_update(dims, cfg_j)
+    upd_s, init_s = SAC.make_update(dims, cfg_s)
+    pj, oj, mj = upd_j(params, init_j(params), batch)
+    ps, os_, ms = upd_s(params, init_s(params), batch)
+
+    _tree_allclose(pj["critic"], ps["critic"])
+    _tree_allclose(pj["icm"], ps["icm"])
+    _tree_allclose(jax.tree.map(lambda x: x, oj["critic"]), os_["critic"])
+    for k in ("critic_loss", "r_c", "icm_inv_loss", "icm_fwd_loss"):
+        np.testing.assert_allclose(float(mj[k]), float(ms[k]), rtol=1e-5,
+                                   atol=1e-7)
+    # actor: bounded by the one-eta_c-step advantage staleness
+    diffs = [np.abs(np.asarray(a) - np.asarray(b)).max()
+             for a, b in zip(jax.tree.leaves(pj["actor"]),
+                             jax.tree.leaves(ps["actor"]))]
+    assert max(diffs) < 5e-4, diffs
+    # actor_loss is evaluated against pre- vs post-step critic values, so
+    # it agrees only to the relative scale of the advantage staleness
+    np.testing.assert_allclose(float(mj["actor_loss"]),
+                               float(ms["actor_loss"]), rtol=2e-2)
+
+
+def test_fused_scan_metrics_are_means():
+    """make_fused_update / make_scan_updates report per-metric MEANS over
+    the scan, not the final step's sample."""
+    def update_fn(params, opt_state, batch):
+        step = params + 1.0
+        return step, opt_state, {"step": step}
+
+    buf = R.buffer_init(8, {"x": jnp.zeros(())})
+    buf = R.buffer_add(buf, {"x": jnp.arange(8.0)})
+    p0 = jnp.zeros(())
+    _, _, m = R.make_fused_update(update_fn, 2, 5)(p0, (), buf,
+                                                   jax.random.PRNGKey(0))
+    np.testing.assert_allclose(float(m["step"]), np.mean([1, 2, 3, 4, 5]))
+
+    def scan_update(params, opt_state, batch):
+        step = params + 1.0
+        return step, opt_state, {"step": step}
+
+    _, _, m = R.make_scan_updates(scan_update, 4)(p0, (), {"x": jnp.zeros(2)})
+    np.testing.assert_allclose(float(m["step"]), np.mean([1, 2, 3, 4]))
+
+
+def test_packed_obs_keys_match_legacy_hash_counts(env):
+    """The vectorized packing gives exactly the legacy _obs_hash's
+    distinct-state counts on real trajectories, and the device lanes
+    reassemble to the host keys bit-for-bit."""
+
+    def legacy_obs_hash(obs, bins=4.0):  # the pre-refactor row hash
+        o = np.asarray(obs)
+        discrete = o[3:]
+        head = np.round(o[:3] * bins)
+        return hash(tuple(np.round(discrete * bins).astype(np.int64).tolist())
+                    + tuple(head.astype(np.int64).tolist()))
+
+    cfg = SAC.SACConfig(hidden=16, feat_dim=4, attn_dim=8)
+    params = SAC.init_agent(jax.random.PRNGKey(0), env.obs_dim,
+                            env.action_dims, cfg)
+    rollout = R.make_batched_rollout(env, R.uniform_policy(env.action_dims),
+                                     cfg.hist_len)
+    st0 = R.make_batched_reset(env)(jax.random.split(jax.random.PRNGKey(1), 6))
+    _, traj = rollout(params, st0, jax.random.split(jax.random.PRNGKey(2), 6))
+    obs = np.asarray(traj["obs"])  # (6, T, D)
+
+    legacy_seen, new_seen = set(), set()
+    keys = _pack_obs_keys_np(obs)
+    legacy_counts, new_counts = [], []
+    for i in range(obs.shape[0]):
+        for row in obs[i]:
+            legacy_seen.add(legacy_obs_hash(row))
+        new_seen.update(int(k) for k in np.unique(keys[i]))
+        legacy_counts.append(len(legacy_seen))
+        new_counts.append(len(new_seen))
+    assert new_counts == legacy_counts
+
+    lanes = np.asarray(R.pack_obs_keys(traj["obs"]))
+    combined = ((lanes[..., 0].astype(np.uint64) << np.uint64(32))
+                | lanes[..., 1].astype(np.uint64))
+    np.testing.assert_array_equal(combined, keys)
+
+
+def test_train_chunk_matches_unfused_pieces(env):
+    """One fused chunk call reproduces the unfused engine ops it replaced:
+    same rollout sums, same buffer contents, same packed keys, and the
+    cond-gated update scan matches make_fused_update on the same key."""
+    cfg = SAC.SACConfig(hidden=16, feat_dim=4, attn_dim=8, batch=8,
+                        buffer_size=128)
+    dims = env.action_dims
+    params = SAC.init_agent(jax.random.PRNGKey(0), env.obs_dim, dims, cfg)
+    update, init_opt = SAC.make_update(dims, cfg)
+    opt_state = init_opt(params)
+    n_updates = 3
+    num_envs = 4
+
+    chunk = R.make_train_chunk(
+        env, R.uniform_policy(dims), R.sac_policy(dims, cfg), update,
+        hist_len=cfg.hist_len, fields=_SAC_FIELDS, batch_size=cfg.batch,
+        n_updates=n_updates,
+    )
+    rkeys = jax.random.split(jax.random.PRNGKey(1), num_envs)
+    akeys = jax.random.split(jax.random.PRNGKey(2), num_envs)
+    ukey = jax.random.PRNGKey(3)
+
+    buf0 = R.buffer_init(cfg.buffer_size, _sac_example(env, cfg))
+    p1, o1, buf1, m1 = chunk(params, opt_state, buf0,
+                             rkeys, akeys, ukey, jnp.asarray(False))
+    # warmup chunk: no update ran, params/opt untouched, update metrics zero
+    assert not bool(m1["did_update"])
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), p1, params)
+    assert all(float(v) == 0.0 for v in jax.tree.leaves(m1["update"]))
+
+    # reference: the previously-separate dispatches with the same keys
+    st0 = R.make_batched_reset(env)(rkeys)
+    rollout = R.make_batched_rollout(env, R.uniform_policy(dims),
+                                     cfg.hist_len)
+    _, traj = rollout(params, st0, akeys)
+    np.testing.assert_allclose(np.asarray(m1["reward"]),
+                               np.asarray(traj["reward"].sum(1)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1["leak"]),
+                               np.asarray(traj["leak"].sum(1)), rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(m1["obs_keys"]),
+        np.asarray(R.pack_obs_keys(traj["obs"])))
+    buf_ref = R.buffer_add(buf0, R.flatten_transitions(traj, _SAC_FIELDS))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), buf1.data, buf_ref.data)
+
+    # training chunk: buffer now holds >= batch rows, so the update runs
+    # and matches make_fused_update applied to the post-add buffer
+    p2, o2, buf2, m2 = chunk(params, opt_state, buf1,
+                             rkeys, akeys, ukey, jnp.asarray(True))
+    assert bool(m2["did_update"])
+    st0 = R.make_batched_reset(env)(rkeys)
+    actor_roll = R.make_batched_rollout(env, R.sac_policy(dims, cfg),
+                                        cfg.hist_len)
+    _, traj2 = actor_roll(params, st0, akeys)
+    buf_ref2 = R.buffer_add(buf_ref, R.flatten_transitions(traj2, _SAC_FIELDS))
+    fused = R.make_fused_update(update, cfg.batch, n_updates)
+    p_ref, o_ref, m_ref = fused(params, opt_state, buf_ref2, ukey)
+    _tree_allclose(p2, p_ref)
+    _tree_allclose(m2["update"], m_ref, atol=1e-5)
+
+
+def test_train_chunk_compiles_once(env):
+    """Recompile audit: warmup -> train transition, repeated chunks, and a
+    multi-point scenario sweep all reuse ONE compiled fused chunk."""
+    cfg = SAC.SACConfig(hidden=16, feat_dim=4, attn_dim=8, batch=8,
+                        buffer_size=128)
+    dims = env.action_dims
+    params = SAC.init_agent(jax.random.PRNGKey(0), env.obs_dim, dims, cfg)
+    update, init_opt = SAC.make_update(dims, cfg)
+    opt_state = init_opt(params)
+    chunk = R.make_train_chunk(
+        env, R.uniform_policy(dims), R.sac_policy(dims, cfg), update,
+        hist_len=cfg.hist_len, fields=_SAC_FIELDS, batch_size=cfg.batch,
+        n_updates=2,
+    )
+    buf = R.buffer_init(cfg.buffer_size, _sac_example(env, cfg))
+    rkeys = jax.random.split(jax.random.PRNGKey(1), 2)
+    base = env.scenario()
+    sweep = [None, None,  # warmup chunks
+             replace_param(base, "monitor_prob", 0.3),
+             replace_param(base, "monitor_prob", 0.9),
+             replace_param(base, "gamma_e", 40.0)]
+    for i, sp in enumerate(sweep):
+        akeys = jax.random.split(jax.random.PRNGKey(10 + i), 2)
+        params, opt_state, buf, _ = chunk(
+            params, opt_state, buf, rkeys, akeys,
+            jax.random.PRNGKey(20 + i), jnp.asarray(i >= 2), sp,
+        )
+    assert chunk.trace_count[0] == 1
