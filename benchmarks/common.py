@@ -10,6 +10,58 @@ from typing import Optional
 import numpy as np
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_throughput.json")
+
+
+def enable_persistent_cache():
+    """Opt-in JAX persistent compilation cache (``REPRO_JIT_CACHE_DIR``).
+
+    The pipeline/throughput benchmarks are compile-heavy (a dozen
+    shard_map scan programs); with the env knob set, bench-smoke and
+    repeat local runs stop re-paying those compiles. Returns the cache
+    dir when enabled, None otherwise. Safe on jax versions without the
+    config knobs (silently disabled).
+    """
+    cache_dir = os.environ.get("REPRO_JIT_CACHE_DIR")
+    if not cache_dir:
+        return None
+    os.makedirs(cache_dir, exist_ok=True)
+    try:
+        import jax
+
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # CPU-backend compiles are small and fast individually - cache
+        # everything rather than only >1s entries
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except Exception:  # noqa: BLE001 - older jax: knob names differ; skip
+        return None
+    return cache_dir
+
+
+def record_baseline(entries: dict) -> None:
+    """Merge NEW metric keys into ``BENCH_throughput.json`` (write-once).
+
+    Existing keys are never clobbered by routine runs (set
+    ``BENCH_THROUGHPUT_REFRESH=1`` to deliberately re-record the CALLER'S
+    keys - other benchmarks' entries are always preserved); a newly added
+    metric is backfilled the first time it is measured. Callers skip this
+    entirely in smoke mode.
+    """
+    refresh = os.environ.get("BENCH_THROUGHPUT_REFRESH") == "1"
+    if os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH) as f:
+            baseline = json.load(f)
+    else:
+        baseline = {}
+    missing = [k for k in entries if refresh or k not in baseline]
+    if not missing:
+        return
+    for k in missing:
+        baseline[k] = entries[k]
+    with open(BASELINE_PATH, "w") as f:
+        json.dump(baseline, f, indent=1, default=float)
 
 
 @dataclass(frozen=True)

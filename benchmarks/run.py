@@ -16,7 +16,7 @@ import argparse
 import sys
 import time
 
-from benchmarks.common import BenchConfig, emit_csv_row
+from benchmarks.common import BenchConfig, emit_csv_row, enable_persistent_cache
 
 ALL = [
     "fig3_convergence",
@@ -29,6 +29,7 @@ ALL = [
     "table_power",
     "roofline",
     "throughput",
+    "pipeline",
 ]
 
 
@@ -43,6 +44,9 @@ def main(argv=None) -> None:
 
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
+    cache_dir = enable_persistent_cache()  # REPRO_JIT_CACHE_DIR opt-in
+    if cache_dir:
+        print(f"# jit cache: {cache_dir}", flush=True)
     bench = BenchConfig(quick=not args.full, smoke=args.smoke)
     names = ALL if not args.only else [
         n for n in ALL if any(n.startswith(o.strip()) for o in args.only.split(","))

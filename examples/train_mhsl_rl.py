@@ -27,7 +27,7 @@ from repro.core.agents.loops import train_sac
 from repro.core.agents.sac import SACConfig
 from repro.core.channel import NetworkConfig
 from repro.core.env import MHSLEnv
-from repro.core.pipeline import make_stage_mesh, pipeline_loss_fn
+from repro.core.pipeline import PipelineConfig, make_stage_mesh, pipeline_step_fn
 from repro.core.profiles import transformer_profile
 from repro.models import init_params
 from repro.optim import adamw
@@ -126,13 +126,15 @@ def main():
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     mesh = make_stage_mesh(stages)
-    pl = pipeline_loss_fn(cfg, mesh, boundaries=boundaries, n_microbatches=2)
+    # the 1F1B executor: interleaved schedule, masked uneven stages
+    step_fn = pipeline_step_fn(cfg, mesh, boundaries=boundaries,
+                               n_microbatches=2, pipe=PipelineConfig())
     opt = adamw(3e-4, max_grad_norm=1.0)
     opt_state = opt.init(params)
 
     @jax.jit
     def train_step(params, opt_state, tokens, labels):
-        loss, grads = jax.value_and_grad(pl)(params, tokens, labels)
+        loss, grads = step_fn(params, tokens, labels)
         ups, opt_state = opt.update(grads, opt_state, params)
         return apply_updates(params, ups), opt_state, loss
 

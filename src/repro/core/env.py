@@ -47,7 +47,7 @@ from repro.core.channel import (
     tx_time,
 )
 from repro.core.leakage import sample_leakage
-from repro.core.profiles import LayerProfile
+from repro.core.profiles import LayerProfile, profile_table
 from repro.core.scenario import ScenarioParams, scenario_from_net
 
 Array = jax.Array
@@ -131,15 +131,54 @@ class MHSLEnv:
     def _params(self, params: Optional[ScenarioParams]) -> ScenarioParams:
         return self.scenario() if params is None else params
 
+    # ---- split-plan oracle -------------------------------------------------
+    def make_split_oracle(self):
+        """Device-side oracle over EVERY split of this env's profile.
+
+        Returns ``oracle(dev_pos, devices, p_tx, decoy_power, scenario=None)``
+        scoring all ``(L-1 choose S-1)`` boundary plans (Eq. 10/11 static
+        cost) in one jitted dispatch for a candidate device assignment
+        ``devices`` (S,), per-hop trainer powers ``p_tx`` (S-1,) and decoy
+        powers ``decoy_power`` (S-1, U+1). ``dev_pos`` is the (U+1, 2)
+        position array from an :class:`EnvState`. The result dict carries
+        the stacked ``boundaries`` plus per-plan ``delay``/``energy`` and a
+        ``feasible`` mask against the scenario budgets - the fast oracle
+        for masking split-size actions that cannot meet Eq. 10/11, and the
+        batched replacement for per-plan :func:`repro.core.splitting.plan_cost`
+        loops. Scenario sweeps reuse one trace (``oracle.trace_count``).
+        """
+        from repro.core.splitting import make_plan_scorer, stack_boundaries
+
+        bounds = stack_boundaries(self.L, self.S)
+        scorer = make_plan_scorer(self.profile)
+
+        def oracle(dev_pos, devices, p_tx, decoy_power,
+                   scenario: Optional[ScenarioParams] = None):
+            sp = self._params(scenario)
+            t, e = scorer(bounds, devices, dev_pos, p_tx, decoy_power, sp)
+            return {
+                "boundaries": bounds,
+                "delay": t,
+                "energy": e,
+                "feasible": (t <= sp.gamma_t) & (e <= sp.gamma_e),
+            }
+
+        oracle.trace_count = scorer.trace_count
+        return oracle
+
     # ---- constants as jnp --------------------------------------------------
     def _consts(self):
-        prof = self.profile
-        act_bits = jnp.asarray(prof.act_bytes * 8.0)
-        grad_bits = jnp.asarray(prof.grad_bytes * 8.0)
-        leak = jnp.asarray(prof.leak_value / prof.leak_value.max())
-        fwd_cum = jnp.asarray(np.concatenate([[0.0], np.cumsum(prof.fwd_flops)]))
-        bwd_cum = jnp.asarray(np.concatenate([[0.0], np.cumsum(prof.bwd_flops)]))
-        return act_bits, grad_bits, leak, fwd_cum, bwd_cum
+        # hoisted per-profile host tables (cached across envs sharing the
+        # profile); the jnp.asarray casts reproduce the seed's f32 values
+        # bit-exactly inside each trace
+        t = profile_table(self.profile)
+        return (
+            jnp.asarray(t.act_bits),
+            jnp.asarray(t.grad_bits),
+            jnp.asarray(t.leak_norm),
+            jnp.asarray(t.fwd_cum),
+            jnp.asarray(t.bwd_cum),
+        )
 
     # ---- reset ---------------------------------------------------------------
     def reset(self, key, params: Optional[ScenarioParams] = None) -> EnvState:

@@ -4,32 +4,85 @@ The paper's multi-hop split learning IS pipeline parallelism: sub-model k
 on device s_k, activations hop s_k -> s_{k+1} (Eq. 1), gradients hop back
 (Eq. 4). Here a ``SplitPlan`` executes on a TPU mesh 'stage' axis via
 ``shard_map`` with ``jax.lax.ppermute`` hops - ICI links play the role of
-the wireless links, and JAX's ppermute transpose gives the backward hops
-automatically under ``jax.grad``.
+the wireless links.
+
+Two schedules, selected by :class:`PipelineConfig`:
+
+* ``fill_drain`` (the reference): a GPipe-style forward scan of
+  ``M + S - 1`` ticks whose backward comes from ``jax.grad`` reversing
+  the scan (all forwards, then all backwards). Every stage is padded to
+  the longest stage with zero-initialized blocks - exact identities, so
+  the function is preserved, but the padded blocks and the per-tick
+  final-norm + LM-head + loss computed on EVERY stage all burn real
+  compute.
+* ``1f1b`` (the fast path, :func:`pipeline_step_fn`): an interleaved
+  one-forward-one-backward schedule over ``M + 2(S-1)`` ticks. Each tick
+  a stage runs the forward of one in-flight microbatch AND the manual
+  VJP of another (warmup/drain slots are ``lax.cond``-ed out, so idle
+  ticks skip their compute); activations/cotangents hop between ticks as
+  donated scan carries via paired ``ppermute``s. Stage compute is masked
+  to the stage's ACTIVE length (a per-stage ``lax.cond`` over the padded
+  block scan), so uneven RL splits no longer pay the padded max-length
+  matmuls - the Eq. 10 imbalance cost stays visible as bubble ticks, not
+  as fake FLOPs. The LM head/loss runs only on the last stage's backward
+  slot, and its param gradients accumulate in fp32 on-device, sharded by
+  stage. Backward slots rematerialize their stage forward from a stashed
+  stage input (depth ``2(S-1)+1`` ring), which is what bounds the stash
+  at O(S) activations instead of GPipe's O(M).
 
 Uneven splits (the RL agent's choice!) are supported by padding every
 stage to the longest stage with zero-initialized blocks: residual blocks
 with zeroed projections are exact identities, so the pipeline computes the
-same function while exposing the real cost of imbalance (bubble time) -
-exactly the trade-off the paper's Eq. 10 penalizes.
+same function while exposing the real cost of imbalance - exactly the
+trade-off the paper's Eq. 10 penalizes.
 
 Restriction: architectures with layer-group period 1 (all but Jamba, whose
 period is 8; noted in DESIGN.md SArch-applicability).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_stage_mesh  # noqa: F401  (re-export)
 from repro.models import model as M
 from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Split-executor knobs.
+
+    ``schedule``: ``"1f1b"`` (interleaved steady-state, masked uneven
+    splits, manual per-stage VJP) or ``"fill_drain"`` (the GPipe-style
+    reference whose backward is ``jax.grad`` of the forward scan).
+    ``stage_impl``: ``"reference"`` applies blocks through
+    ``models.layers``; ``"pallas"`` routes the residual MLP half-block
+    through the fused Pallas stage kernel
+    (``repro.kernels.stage_block``, interpret-mode on CPU).
+    """
+
+    schedule: str = "1f1b"
+    stage_impl: str = "reference"
+    # activation dtype on the wire and in stage compute. bf16 is the
+    # production default; the grad-parity tests pin both schedules at f32,
+    # where reassociation noise drops below the 2e-5 gate.
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def block_impl(self) -> str:
+        assert self.stage_impl in ("reference", "pallas"), self.stage_impl
+        return "pallas_stage" if self.stage_impl == "pallas" else "auto"
 
 
 def stage_lengths(boundaries: Sequence[int]) -> Tuple[int, ...]:
@@ -67,13 +120,32 @@ def restack_for_stages(slot_params, boundaries: Sequence[int]):
     return jax.tree.map(one, slot_params)
 
 
-def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
-                     n_microbatches: int, stage_axis: str = "stage"):
-    """Build a pipelined LM loss: (params, tokens, labels) -> scalar loss.
+def unstack_stage_grads(stage_grads, boundaries: Sequence[int]):
+    """(S, max_len, ...) per-stage grads -> (L, ...) layer layout.
 
-    tokens: (M * mb, T). The GPipe-style schedule runs M + S - 1 ticks;
-    each tick every stage applies its blocks and ppermutes the activation
-    to the next stage.
+    Inverse of :func:`restack_for_stages`; the zero-padding rows are
+    dropped (their gradients are exact zeros - the padded blocks touch
+    the residual stream through zeroed projections on both sides).
+    """
+    lens = stage_lengths(boundaries)
+
+    def one(a):
+        return jnp.concatenate([a[k, : lens[k]] for k in range(len(lens))], axis=0)
+
+    return jax.tree.map(one, stage_grads)
+
+
+def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
+                     n_microbatches: int, stage_axis: str = "stage",
+                     pipe: Optional[PipelineConfig] = None):
+    """Build the fill-drain (GPipe) pipelined LM loss - the REFERENCE path.
+
+    (params, tokens, labels) -> scalar loss; backward comes from
+    ``jax.grad`` reversing the scan. tokens: (M * mb, T). The schedule
+    runs M + S - 1 ticks; each tick every stage applies its (padded)
+    blocks and ppermutes the activation to the next stage. The 1F1B
+    executor (:func:`pipeline_step_fn`) is gradient-compatible with this
+    function at rtol <= 2e-5 and is what the benchmarks race against it.
     """
     sig = M.signature(cfg)
     period = M.find_period(sig)
@@ -81,6 +153,8 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     slot_sig = sig[0]
     s_stages = len(boundaries)
     max_len = max(stage_lengths(boundaries))
+    blk_impl = pipe.block_impl if pipe is not None else "auto"
+    act_dtype = pipe.dtype if pipe is not None else jnp.bfloat16
 
     def fn(params, tokens, labels):
         stage_blocks = restack_for_stages(params["slots"][0], boundaries)
@@ -99,7 +173,7 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                     blk = jax.tree.map(lambda a: a[i], stage_blocks)
                     x, _, _ = M.block_apply(
                         blk, x, cfg, slot_sig, positions=positions, cache=None,
-                        cache_index=None, impl="auto",
+                        cache_index=None, impl=blk_impl,
                     )
                 return x
 
@@ -129,7 +203,7 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                 x = jax.lax.ppermute(x, stage_axis, perm)
                 return (x, loss_acc, nloss), None
 
-            x0 = jnp.zeros((mb, t_len, cfg.d_model), jnp.bfloat16)
+            x0 = jnp.zeros((mb, t_len, cfg.d_model), act_dtype)
             ticks = n_microbatches + s_stages - 1
             (x, loss_acc, nloss), _ = jax.lax.scan(
                 tick, (x0, jnp.zeros((1,)), jnp.zeros((1,))), jnp.arange(ticks)
@@ -155,7 +229,245 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     return fn
 
 
-def make_stage_mesh(n_stages: int, stage_axis: str = "stage") -> Mesh:
-    devs = jax.devices()[:n_stages]
-    assert len(devs) >= n_stages, f"need {n_stages} devices, have {len(jax.devices())}"
-    return Mesh(np.array(devs), (stage_axis,))
+def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
+                     n_microbatches: int, stage_axis: str = "stage",
+                     pipe: PipelineConfig = PipelineConfig()):
+    """Build the pipelined train step: (params, tokens, labels) -> (loss, grads).
+
+    ``pipe.schedule == "1f1b"`` runs the interleaved schedule described in
+    the module docstring; ``"fill_drain"`` wraps the reference loss in
+    ``jax.value_and_grad`` (useful as the benchmark baseline and parity
+    oracle). Gradients come back in the exact ``params`` pytree structure
+    (zero for untouched leaves such as frontends).
+
+    1F1B mechanics (S stages, M microbatches, T = M + 2(S-1) ticks,
+    stash depth D = 2(S-1) + 1):
+
+    * tick ``t``, stage ``i`` FORWARDS microbatch ``t - i`` (when in
+      ``[0, M)``) and BACKWARDS microbatch ``t - 2(S-1) + i`` - the last
+      stage runs its forward and backward of the same microbatch
+      back-to-back in one tick, which is what shortens the schedule to
+      ``M + 2(S-1)`` ticks against fill-drain's ``2(M + S - 1)``.
+    * a stage's forward stashes only its INPUT activation; the backward
+      slot re-runs the stage forward under ``jax.vjp`` (rematerialized
+      backward), keeping the stash O(S) deep.
+    * the forward slot is skipped on the last stage (its loss VJP
+      recomputes it), so the final-norm + LM-head + loss run ONCE per
+      microbatch instead of on every stage every tick.
+    * per-stage block grads accumulate sharded (out_spec along the stage
+      axis) and are re-laid-out to the (L, ...) slot layout host-side;
+      embed/final-norm/head grads are psum'd across stages.
+    """
+    if pipe.schedule == "fill_drain":
+        loss_fn = pipeline_loss_fn(cfg, mesh, boundaries, n_microbatches,
+                                   stage_axis, pipe=pipe)
+
+        def fd_step(params, tokens, labels):
+            return jax.value_and_grad(loss_fn)(params, tokens, labels)
+
+        return fd_step
+    assert pipe.schedule == "1f1b", pipe.schedule
+
+    sig = M.signature(cfg)
+    period = M.find_period(sig)
+    assert period == 1, f"pipeline executor needs period-1 archs, got {period}"
+    slot_sig = sig[0]
+    s_stages = len(boundaries)
+    lens = stage_lengths(boundaries)
+    max_len = max(lens)
+    m_micro = n_microbatches
+    n_ticks = m_micro + 2 * (s_stages - 1)
+    depth = 2 * (s_stages - 1) + 1  # activation-stash ring depth
+    blk_impl = pipe.block_impl
+
+    def fn(params, tokens, labels):
+        stage_blocks = restack_for_stages(params["slots"][0], boundaries)
+        lens_arr = jnp.asarray(lens, jnp.int32)
+        m_total, t_len = tokens.shape
+        mb = m_total // m_micro
+        tok_mb = tokens.reshape(m_micro, mb, t_len)
+        lab_mb = labels.reshape(m_micro, mb, t_len)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+        def per_stage(stage_blocks, lens_arr, tok_mb, lab_mb, embed,
+                      final_norm, head):
+            stage_blocks = jax.tree.map(lambda a: a[0], stage_blocks)
+            active_len = lens_arr[0]
+            sidx = jax.lax.axis_index(stage_axis)
+            is_first = sidx == 0
+            is_last = sidx == s_stages - 1
+            positions = jnp.arange(t_len)
+
+            def stage_fwd(blocks, x):
+                # scan over the padded block stack; the cond masks compute
+                # down to the stage's ACTIVE length (padding blocks are
+                # exact identities, so skipping them is value-preserving)
+                def body(xc, blk_i):
+                    blk, i = blk_i
+
+                    def apply(xx):
+                        out, _, _ = M.block_apply(
+                            blk, xx, cfg, slot_sig, positions=positions,
+                            cache=None, cache_index=None, impl=blk_impl,
+                        )
+                        return out
+
+                    xc = jax.lax.cond(i < active_len, apply, lambda xx: xx, xc)
+                    return xc, None
+
+                out, _ = jax.lax.scan(body, x, (blocks, jnp.arange(max_len)))
+                return out
+
+            def stage_loss(blocks, fnorm, hd, x, lab):
+                y = stage_fwd(blocks, x)
+                xh = L.rms_norm(y, fnorm, cfg.norm_eps)
+                logits = jnp.einsum("bsd,dv->bsv", xh, hd.astype(y.dtype))
+                return M.softmax_xent(logits, lab)
+
+            zero_blocks = jax.tree.map(jnp.zeros_like, stage_blocks)
+
+            def tick(carry, t):
+                x_in, g_in, stash, gblocks, gembed, gnorm, ghead, loss_acc = carry
+
+                # ---- forward slot: microbatch t - i -----------------------
+                mf = t - sidx
+                f_valid = (mf >= 0) & (mf < m_micro)
+                # the embedding gather is stage 0's alone - cond it out on
+                # the other S-1 stages instead of masking it to zeros
+                x0 = jax.lax.cond(
+                    is_first,
+                    lambda xx: embed[
+                        tok_mb[jnp.clip(mf, 0, m_micro - 1)]
+                    ].astype(xx.dtype),
+                    lambda xx: xx,
+                    x_in,
+                )
+                stash = jax.lax.cond(
+                    f_valid,
+                    lambda st: jax.lax.dynamic_update_index_in_dim(
+                        st, x0, jnp.mod(mf, depth), 0
+                    ),
+                    lambda st: st,
+                    stash,
+                )
+                # the last stage's forward happens inside its loss VJP, so
+                # its forward slot only stashes
+                y = jax.lax.cond(
+                    f_valid & (~is_last),
+                    lambda xx: stage_fwd(stage_blocks, xx),
+                    lambda xx: xx,
+                    x0,
+                )
+
+                # ---- backward slot: microbatch t - 2(S-1) + i -------------
+                mbk = t - 2 * (s_stages - 1) + sidx
+                b_valid = (mbk >= 0) & (mbk < m_micro)
+                mb_c = jnp.clip(mbk, 0, m_micro - 1)
+                x_saved = jax.lax.dynamic_index_in_dim(
+                    stash, jnp.mod(mbk, depth), 0, keepdims=False
+                )
+                lab = lab_mb[mb_c]
+                toksb = tok_mb[mb_c]
+
+                def run_bwd(operand):
+                    x_sv, g, lb = operand
+
+                    def last_branch(_):
+                        li, vjp = jax.vjp(
+                            lambda bl, fn_, hd_, xx: stage_loss(bl, fn_, hd_, xx, lb),
+                            stage_blocks, final_norm, head, x_sv,
+                        )
+                        dbl, dfn, dhd, dx = vjp(jnp.asarray(1.0 / m_micro, jnp.float32))
+                        return li, dbl, dfn, dhd, dx
+
+                    def mid_branch(_):
+                        _, vjp = jax.vjp(
+                            lambda bl, xx: stage_fwd(bl, xx), stage_blocks, x_sv
+                        )
+                        dbl, dx = vjp(g)
+                        return (jnp.zeros((), jnp.float32), dbl,
+                                jnp.zeros_like(final_norm), jnp.zeros_like(head),
+                                dx)
+
+                    return jax.lax.cond(is_last, last_branch, mid_branch, None)
+
+                def skip_bwd(operand):
+                    x_sv, g, _lb = operand
+                    return (jnp.zeros((), jnp.float32), zero_blocks,
+                            jnp.zeros_like(final_norm), jnp.zeros_like(head),
+                            jnp.zeros_like(g))
+
+                li, dbl, dfn, dhd, dx = jax.lax.cond(
+                    b_valid, run_bwd, skip_bwd, (x_saved, g_in, lab)
+                )
+                gblocks = jax.tree.map(jnp.add, gblocks, dbl)
+                gnorm = gnorm + dfn
+                ghead = ghead + dhd
+                loss_acc = loss_acc + li
+                # stage 0's dx is the cotangent of the embedding lookup;
+                # the full-vocab scatter-add is cond-gated like the other
+                # idle slots (it would otherwise run masked-to-zero on
+                # every stage every tick)
+                gembed = jax.lax.cond(
+                    b_valid & is_first,
+                    lambda ge: ge.at[toksb].add(dx.astype(ge.dtype)),
+                    lambda ge: ge,
+                    gembed,
+                )
+
+                # ---- the hops (Eq. 1 forward, Eq. 4 gradient) -------------
+                perm_f = [(i, (i + 1) % s_stages) for i in range(s_stages)]
+                perm_b = [(i, (i - 1) % s_stages) for i in range(s_stages)]
+                x_next = jax.lax.ppermute(y, stage_axis, perm_f)
+                g_next = jax.lax.ppermute(dx, stage_axis, perm_b)
+                return (x_next, g_next, stash, gblocks, gembed, gnorm, ghead,
+                        loss_acc), None
+
+            x0 = jnp.zeros((mb, t_len, cfg.d_model), pipe.dtype)
+            g0 = jnp.zeros_like(x0)
+            stash0 = jnp.zeros((depth,) + x0.shape, x0.dtype)
+            carry0 = (
+                x0, g0, stash0,
+                jax.tree.map(jnp.zeros_like, stage_blocks),
+                jnp.zeros_like(embed),
+                jnp.zeros_like(final_norm),
+                jnp.zeros_like(head),
+                jnp.zeros((), jnp.float32),
+            )
+            (_, _, _, gblocks, gembed, gnorm, ghead, loss_acc), _ = jax.lax.scan(
+                tick, carry0, jnp.arange(n_ticks)
+            )
+            loss = jax.lax.psum(loss_acc, stage_axis) / m_micro
+            gembed = jax.lax.psum(gembed, stage_axis)
+            gnorm = jax.lax.psum(gnorm, stage_axis)
+            ghead = jax.lax.psum(ghead, stage_axis)
+            return (loss, jax.tree.map(lambda a: a[None], gblocks), gembed,
+                    gnorm, ghead)
+
+        loss, gstages, gembed, gnorm, ghead = shard_map(
+            per_stage,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: P(stage_axis), stage_blocks),
+                P(stage_axis), P(), P(), P(), P(), P(),
+            ),
+            out_specs=(
+                P(),
+                jax.tree.map(lambda _: P(stage_axis), stage_blocks),
+                P(), P(), P(),
+            ),
+            check_rep=False,
+        )(stage_blocks, lens_arr, tok_mb, lab_mb, params["embed"],
+          params["final_norm"], head)
+
+        grads = jax.tree.map(jnp.zeros_like, params)
+        grads["slots"] = (unstack_stage_grads(gstages, boundaries),)
+        grads["final_norm"] = gnorm
+        if cfg.tie_embeddings:
+            grads["embed"] = gembed + ghead.T
+        else:
+            grads["embed"] = gembed
+            grads["lm_head"] = ghead
+        return loss, grads
+
+    return fn

@@ -50,6 +50,69 @@ class LayerProfile:
         return float(self.param_bytes.sum())
 
 
+@dataclass(frozen=True)
+class ProfileTable:
+    """Hoisted per-profile arrays shared by every plan-cost consumer.
+
+    ``plan_cost``/``score_plans`` and ``MHSLEnv._consts`` all need the same
+    derived quantities: per-layer boundary bits and cumulative-FLOP tables
+    (stage sums become two gathers + a subtraction instead of a per-stage
+    slice-and-sum). Building them per call made the host plan scorer
+    re-derive each field S times per plan; this table is computed once per
+    ``LayerProfile`` and cached (see :func:`profile_table`). All arrays are
+    host numpy (float64) - device consumers ``jnp.asarray`` them inside
+    their traces, which reproduces the seed's exact f32 casts.
+    """
+
+    act_bits: np.ndarray  # (L,)   activation bits emitted by layer i
+    grad_bits: np.ndarray  # (L,)   cotangent bits entering layer i
+    leak_norm: np.ndarray  # (L,)   leak_value / max(leak_value)
+    fwd_cum: np.ndarray  # (L+1,) cumulative fwd FLOPs, fwd_cum[0] = 0
+    bwd_cum: np.ndarray  # (L+1,) cumulative bwd FLOPs
+
+
+def profile_digest(profile: LayerProfile) -> str:
+    """Content digest of a profile's arrays (plus name).
+
+    Cache key for the derived-table and plan-scorer caches: two
+    equal-content profiles (e.g. ``transformer_profile`` rebuilt per sweep
+    point) share one entry - and one compiled scorer - instead of keying
+    on object identity and silently recompiling per object. Hashing a few
+    hundred float64s is nanoseconds next to a jit trace.
+    """
+    import hashlib
+
+    h = hashlib.blake2b(profile.name.encode(), digest_size=16)
+    for field in ("param_bytes", "act_bytes", "grad_bytes", "fwd_flops",
+                  "bwd_flops", "leak_value"):
+        arr = np.ascontiguousarray(getattr(profile, field))
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+# content-keyed (see profile_digest); bounded by the number of DISTINCT
+# profiles a process touches
+_TABLE_CACHE: dict = {}
+
+
+def profile_table(profile: LayerProfile) -> ProfileTable:
+    """Cached :class:`ProfileTable` for ``profile`` (built once per content)."""
+    key = profile_digest(profile)
+    hit = _TABLE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    table = ProfileTable(
+        act_bits=profile.act_bytes * 8.0,
+        grad_bits=profile.grad_bytes * 8.0,
+        leak_norm=profile.leak_value / profile.leak_value.max(),
+        fwd_cum=np.concatenate([[0.0], np.cumsum(profile.fwd_flops)]),
+        bwd_cum=np.concatenate([[0.0], np.cumsum(profile.bwd_flops)]),
+    )
+    _TABLE_CACHE[key] = table
+    return table
+
+
 def _leak_weights(L: int, floor: float = 0.3) -> np.ndarray:
     """Depth-decaying data-leakage risk: layer 0 risks raw-data leakage,
     deep layers leak increasingly task-specific features [20]."""

@@ -4,15 +4,30 @@ A plan is ``boundaries`` = cumulative layer counts [c_1 < ... < c_S = L]:
 stage k holds layers [c_{k-1}, c_k). ``devices`` maps stage -> device id
 (device U == the server, which always holds the last stage).
 
-Provides the Eq. 6-11 aggregate delay/energy of executing a plan, and an
-exhaustive plan enumerator used by the oracle baselines and tests.
+Two scoring paths share one :class:`repro.core.profiles.ProfileTable`:
+
+* :func:`plan_cost` - the host reference: one plan at a time, python-float
+  accumulation, per-hop jnp physics. Stage sums come from the hoisted
+  cumulative-FLOP tables (two gathers + a subtraction), so a call is
+  O(S), not O(S * L) re-slicing per field.
+* :func:`score_plans` / :func:`make_plan_scorer` - the device path: the
+  WHOLE plan batch (e.g. every ``(L-1 choose S-1)`` enumeration from
+  :func:`stack_boundaries`) is scored by a single jitted vmap. The
+  network argument is duck-typed like ``repro.core.channel``: a static
+  ``NetworkConfig`` is converted to a ``ScenarioParams`` pytree, so
+  monitor-prob/bandwidth/budget sweeps and boundary re-scores reuse ONE
+  trace (``scorer.trace_count`` audits this). This is the fast oracle
+  the RL env uses for split-action masking and what the cut-point sweep
+  benchmarks call instead of the per-plan python loop.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Iterator, Sequence, Tuple
+from functools import partial
+from typing import Iterator, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -24,7 +39,7 @@ from repro.core.channel import (
     data_rate,
     tx_time,
 )
-from repro.core.profiles import LayerProfile
+from repro.core.profiles import LayerProfile, profile_digest, profile_table
 
 
 @dataclass(frozen=True)
@@ -71,13 +86,19 @@ def plan_cost(
     """Total delay (Eq. 10) and energy (Eq. 11) of one training iteration.
 
     Gradient hops reuse the same powers in reverse (the env lets the agent
-    choose per-hop powers; this helper is the static-cost oracle).
+    choose per-hop powers; this helper is the static-cost oracle). The
+    per-stage FLOP sums come from the cached :func:`profile_table`
+    cumulative tables, so repeated calls do not re-derive each profile
+    field per stage.
     """
     s = plan.num_stages
-    fwd = stage_sums(profile, plan.boundaries, "fwd_flops")
-    bwd = stage_sums(profile, plan.boundaries, "bwd_flops")
-    act_bits = boundary_bits(profile, plan.boundaries, "act_bytes")
-    grad_bits = boundary_bits(profile, plan.boundaries, "grad_bytes")
+    tab = profile_table(profile)
+    b = np.asarray(plan.boundaries, np.int64)
+    lo = np.concatenate([[0], b[:-1]])
+    fwd = tab.fwd_cum[b] - tab.fwd_cum[lo]
+    bwd = tab.bwd_cum[b] - tab.bwd_cum[lo]
+    act_bits = tab.act_bits[b[:-1] - 1]
+    grad_bits = tab.grad_bits[b[:-1] - 1]
 
     t_total = 0.0
     e_total = 0.0
@@ -111,6 +132,15 @@ def enumerate_boundaries(num_layers: int, s: int) -> Iterator[Tuple[int, ...]]:
         yield tuple(cuts) + (num_layers,)
 
 
+def stack_boundaries(num_layers: int, s: int) -> np.ndarray:
+    """The full enumeration as one ``((L-1 choose S-1), S)`` int32 array.
+
+    Host-side, built once; :func:`score_plans` scores the whole stack in
+    a single device dispatch.
+    """
+    return np.asarray(list(enumerate_boundaries(num_layers, s)), np.int32)
+
+
 def even_boundaries(num_layers: int, s: int) -> Tuple[int, ...]:
     base = num_layers // s
     rem = num_layers % s
@@ -119,3 +149,126 @@ def even_boundaries(num_layers: int, s: int) -> Tuple[int, ...]:
         acc += base + (1 if k < rem else 0)
         out.append(acc)
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# vectorized plan scoring (the device-side oracle)
+# ---------------------------------------------------------------------------
+
+
+def _score_one(consts, boundaries, devices, positions, p_tx, decoy, sp):
+    """Eq. 10/11 cost of ONE plan, all-jnp (vmapped over the plan batch).
+
+    ``consts`` = (fwd_cum, bwd_cum, act_bits, grad_bits) device tables;
+    ``sp`` is a ScenarioParams pytree (lambda_f/lambda_b ride along, so a
+    complexity-coefficient sweep is also retrace-free; they default to the
+    1.0 that :func:`plan_cost` applies).
+    """
+    fwd_cum, bwd_cum, act_bits_t, grad_bits_t = consts
+    lo = jnp.concatenate([jnp.zeros((1,), boundaries.dtype), boundaries[:-1]])
+    fwd = fwd_cum[boundaries] - fwd_cum[lo]
+    bwd = bwd_cum[boundaries] - bwd_cum[lo]
+    act_bits = act_bits_t[boundaries[:-1] - 1]
+    grad_bits = grad_bits_t[boundaries[:-1] - 1]
+
+    t_comp = (
+        compute_time_fwd(fwd, sp, lam=sp.lambda_f)
+        + compute_time_bwd(bwd, sp, lam=sp.lambda_b)
+    ).sum()
+    e_comp = compute_energy(fwd + bwd, sp).sum()
+
+    tx_pos = positions[devices[:-1]]  # (S-1, 2)
+    rx_pos = positions[devices[1:]]
+    d_tx_rx = jnp.linalg.norm(tx_pos - rx_pos, axis=-1)
+    d_dec_rx = jnp.linalg.norm(positions[None, :, :] - rx_pos[:, None, :], axis=-1)
+    d_dec_tx = jnp.linalg.norm(positions[None, :, :] - tx_pos[:, None, :], axis=-1)
+    rate = jax.vmap(lambda p, d, ip, idist: data_rate(p, d, ip, idist, sp))
+    r_f = rate(p_tx, d_tx_rx, decoy, d_dec_rx)
+    r_b = rate(p_tx, d_tx_rx, decoy, d_dec_tx)
+    t_f = tx_time(act_bits, r_f)
+    t_b = tx_time(grad_bits, r_b)
+    t_total = t_comp + (t_f + t_b).sum()
+    e_total = e_comp + ((p_tx + decoy.sum(-1)) * (t_f + t_b)).sum()
+    return t_total, e_total
+
+
+def make_plan_scorer(profile: LayerProfile):
+    """Build the jitted batch scorer for ``profile``.
+
+    Returns ``scorer(boundaries, devices, positions, p_tx, decoy_power,
+    net) -> (delay (N,), energy (N,))`` where ``boundaries``/``devices``
+    are ``(N, S)`` plan batches (``devices`` may also be a single ``(S,)``
+    assignment shared by every plan, likewise ``p_tx`` ``(S-1,)`` and
+    ``decoy_power`` ``(S-1, U+1)``), and ``net`` is either a static
+    ``NetworkConfig`` or a ``ScenarioParams`` pytree. Boundary, position,
+    power, and scenario sweeps all hit one compiled trace per batch shape
+    (``scorer.trace_count`` is the audit hook; ``scorer.jitted`` exposes
+    the underlying jit for cache introspection).
+    """
+    from repro.core.scenario import ScenarioParams, scenario_from_net
+
+    tab = profile_table(profile)
+    consts = (
+        jnp.asarray(tab.fwd_cum),
+        jnp.asarray(tab.bwd_cum),
+        jnp.asarray(tab.act_bits),
+        jnp.asarray(tab.grad_bits),
+    )
+    trace_count = [0]
+
+    def _batch(boundaries, devices, positions, p_tx, decoy, sp):
+        trace_count[0] += 1  # executes only while tracing
+        one = partial(_score_one, consts)
+        return jax.vmap(one, in_axes=(0, 0, None, 0, 0, None))(
+            boundaries, devices, positions, p_tx, decoy, sp
+        )
+
+    jitted = jax.jit(_batch)
+
+    def scorer(boundaries, devices, positions, p_tx, decoy_power, net):
+        sp = net if isinstance(net, ScenarioParams) else scenario_from_net(net)
+        boundaries = jnp.asarray(boundaries, jnp.int32)
+        n, s = boundaries.shape
+        devices = jnp.broadcast_to(jnp.asarray(devices, jnp.int32), (n, s))
+        p_tx = jnp.broadcast_to(
+            jnp.asarray(p_tx, jnp.float32), (n, s - 1)
+        )
+        decoy_power = jnp.asarray(decoy_power, jnp.float32)
+        decoy_power = jnp.broadcast_to(
+            decoy_power, (n, s - 1, decoy_power.shape[-1])
+        )
+        return jitted(boundaries, devices, jnp.asarray(positions, jnp.float32),
+                      p_tx, decoy_power, sp)
+
+    scorer.trace_count = trace_count
+    scorer.jitted = jitted
+    return scorer
+
+
+# scorer cache: content-keyed (profiles.profile_digest), so equal-content
+# profiles rebuilt per sweep point share ONE compiled scorer
+_SCORER_CACHE: dict = {}
+
+
+def score_plans(
+    profile: LayerProfile,
+    boundaries,
+    devices,
+    positions,
+    p_tx,
+    decoy_power,
+    net,
+):
+    """Score a whole plan batch in one dispatch (see :func:`make_plan_scorer`).
+
+    Convenience wrapper that caches one scorer per profile CONTENT, so
+    repeated calls (cut-point sweeps, env oracles, benchmarks) share a
+    single compiled trace per batch shape even when the profile object is
+    rebuilt between calls.
+    """
+    key = profile_digest(profile)
+    scorer = _SCORER_CACHE.get(key)
+    if scorer is None:
+        scorer = make_plan_scorer(profile)
+        _SCORER_CACHE[key] = scorer
+    return scorer(boundaries, devices, positions, p_tx, decoy_power, net)

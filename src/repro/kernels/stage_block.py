@@ -1,0 +1,160 @@
+"""Pallas fused residual-stage kernel for the split executor.
+
+One pipeline-stage block spends its MLP half in five HBM round-trips when
+composed from ``models/layers.py`` primitives: RMSNorm read/write, the
+up/gate matmuls, the activation, the down matmul, and the residual add.
+This kernel fuses the whole residual half-block
+
+    y = x + w_down @ act(rms_norm(x) @ w_up [, rms_norm(x) @ w_gate])
+
+into a single VMEM-resident pass per row tile:
+
+  * grid ``(n_r,)`` over row tiles of ``blk`` tokens (the ``(B, S, D)``
+    activation is flattened to ``(B*S, D)`` rows); the weights ride along
+    whole - at split-executor sizes ``(D, F)`` fits VMEM comfortably;
+  * per tile: the f32 RMSNorm, the up/gate matmuls and the down-projection
+    all with ``preferred_element_type=jnp.float32`` (fp32 accumulate even
+    for bf16 activations), the activation nonlinearity on the VPU, and the
+    residual add - no HBM round-trip between the five ops;
+  * supported activations: ``swiglu`` (gated), ``gelu``, ``relu2``,
+    ``silu`` - everything ``models/layers.py`` offers; MoE half-blocks
+    stay on the reference path (the scatter/gather dispatch does not fit
+    a single fused tile).
+
+``interpret=None`` resolves from the backend (compiled on TPU, Pallas
+interpreter elsewhere), exactly like ``ca_attention``. The backward pass
+is the jax AD of the mathematically-identical ``models.layers.mlp_block``
+reference (custom-VJP kernel pattern - pallas_call has no transpose
+rule), so gradients are reference-exact by construction.
+
+Selected by ``PipelineConfig.stage_impl == "pallas"`` through
+``models.model.block_apply``'s ``impl="pallas_stage"`` routing; validated
+forward AND grad against the reference in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _act(name: str, g, u):
+    """Gated/plain activation in f32. ``g`` is None for ungated MLPs."""
+    if name == "swiglu":
+        return jax.nn.silu(g) * u
+    if name == "gelu":
+        return jax.nn.gelu(u)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(u))
+    if name == "silu":
+        return jax.nn.silu(u)
+    raise KeyError(name)
+
+
+def _kernel_gated(x_ref, nw_ref, wg_ref, wu_ref, wd_ref, out_ref, *,
+                  activation: str, eps: float):
+    x = x_ref[...]  # (blk, D)
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    h = (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * nw_ref[...].astype(dt)
+    g = jnp.dot(h, wg_ref[...].astype(dt), preferred_element_type=jnp.float32)
+    u = jnp.dot(h, wu_ref[...].astype(dt), preferred_element_type=jnp.float32)
+    hcurr = _act(activation, g, u).astype(dt)
+    y = jnp.dot(hcurr, wd_ref[...].astype(dt), preferred_element_type=jnp.float32)
+    out_ref[...] = (x32 + y).astype(out_ref.dtype)
+
+
+def _kernel_plain(x_ref, nw_ref, wu_ref, wd_ref, out_ref, *,
+                  activation: str, eps: float):
+    x = x_ref[...]
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    h = (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * nw_ref[...].astype(dt)
+    u = jnp.dot(h, wu_ref[...].astype(dt), preferred_element_type=jnp.float32)
+    hcurr = _act(activation, None, u).astype(dt)
+    y = jnp.dot(hcurr, wd_ref[...].astype(dt), preferred_element_type=jnp.float32)
+    out_ref[...] = (x32 + y).astype(out_ref.dtype)
+
+
+def _forward(norm_w, params, x, activation: str, eps: float, blk: int,
+             interpret: bool):
+    b, s, d = x.shape
+    rows = b * s
+    xr = x.reshape(rows, d)
+    blk = min(blk, rows)
+    n_r = -(-rows // blk)
+    pad = n_r * blk - rows
+    if pad:
+        # padded rows are all-zero: rsqrt(0 + eps) is finite, so they just
+        # compute garbage that is sliced away below
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+
+    gated = activation == "swiglu"
+    f = params["w_up"].shape[-1]
+    row_spec = pl.BlockSpec((blk, d), lambda i: (i, 0))
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    if gated:
+        kernel = functools.partial(_kernel_gated, activation=activation, eps=eps)
+        in_specs = [row_spec, whole((d,)), whole((d, f)), whole((d, f)),
+                    whole((f, d))]
+        args = (xr, norm_w, params["w_gate"], params["w_up"], params["w_down"])
+    else:
+        kernel = functools.partial(_kernel_plain, activation=activation, eps=eps)
+        in_specs = [row_spec, whole((d,)), whole((d, f)), whole((f, d))]
+        args = (xr, norm_w, params["w_up"], params["w_down"])
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_r,),
+        in_specs=in_specs,
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((n_r * blk, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:rows].reshape(b, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused(norm_w, params, x, activation, eps, blk, interpret):
+    return _forward(norm_w, params, x, activation, eps, blk, interpret)
+
+
+def _fused_fwd(norm_w, params, x, activation, eps, blk, interpret):
+    out = _forward(norm_w, params, x, activation, eps, blk, interpret)
+    return out, (norm_w, params, x)
+
+
+def _fused_bwd(activation, eps, blk, interpret, residuals, g):
+    from repro.models.layers import mlp_block
+
+    norm_w, params, x = residuals
+    _, vjp = jax.vjp(
+        lambda nw, p, xx: mlp_block(nw, p, xx, activation, eps),
+        norm_w, params, x,
+    )
+    return vjp(g)
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+_fused_jitted = jax.jit(_fused, static_argnums=(3, 4, 5, 6))
+
+
+def stage_mlp_block(norm_w, params, x, *, activation: str, eps: float = 1e-6,
+                    blk: int = 128, interpret: Optional[bool] = None):
+    """Fused residual MLP half-block: ``x + mlp(rms_norm(x, norm_w))``.
+
+    ``params`` is the ``models.layers.init_mlp`` dict; ``x`` is
+    ``(B, S, D)``. Forward runs the fused Pallas kernel (fp32 accumulate);
+    backward runs the ``models.layers.mlp_block`` reference VJP.
+    ``interpret=None`` resolves from the backend: the compiled kernel on
+    TPU, the Pallas interpreter everywhere else.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _fused_jitted(norm_w, params, x, activation, eps, blk, interpret)

@@ -40,6 +40,24 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return _make_mesh((data, model), ("data", "model"))
 
 
+def make_stage_mesh(n_stages: int, stage_axis: str = "stage"):
+    """1-D mesh over host devices for the split executor's pipeline stages.
+
+    Stage k of a ``SplitPlan`` runs on device k; ``ppermute`` hops along
+    this axis play the paper's wireless activation/gradient hops. Builds
+    ``Mesh`` directly from an explicit device slice (``jax.make_mesh``
+    picks devices itself, and the stage order must be pinned), so it does
+    NOT go through ``_make_mesh`` - it lives here with the other mesh
+    constructors for discoverability.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    assert len(devs) >= n_stages, f"need {n_stages} devices, have {len(devs)}"
+    return Mesh(np.array(devs[:n_stages]), (stage_axis,))
+
+
 def make_population_mesh(num_devices: int | None = None, axis: str = "env"):
     """1-D mesh over host devices for the RL engine's population axis.
 

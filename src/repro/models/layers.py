@@ -375,6 +375,18 @@ def mlp_apply(params, x: Array, activation: str) -> Array:
     return jnp.einsum("bsf,fd->bsd", hcurr, params["w_down"].astype(x.dtype))
 
 
+def mlp_block(norm_w: Array, params, x: Array, activation: str,
+              eps: float = 1e-6) -> Array:
+    """Reference residual MLP half-block: ``x + mlp(rms_norm(x))``.
+
+    This is the exact computation the fused Pallas stage kernel
+    (``repro.kernels.stage_block``) performs in one VMEM-resident pass;
+    the kernel's custom VJP differentiates THIS function, so the two are
+    gradient-identical by construction.
+    """
+    return x + mlp_apply(params, rms_norm(x, norm_w, eps), activation)
+
+
 # ---------------------------------------------------------------------------
 # MoE (top-k, capacity-bounded, scatter/gather dispatch)
 # ---------------------------------------------------------------------------

@@ -85,12 +85,16 @@ def block_apply(
     """One residual block. Returns (x, new_cache, aux)."""
     kind, is_moe, has_mlp = slot_sig
     aux = jnp.zeros((), jnp.float32)
+    # "pallas_stage" (the split executor's PipelineConfig.stage_impl knob)
+    # fuses the residual MLP half-block; the attention/mamba half keeps the
+    # default routing.
+    half_impl = "auto" if impl == "pallas_stage" else impl
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
     if kind == "A":
         out, new_kv = L.attention_apply(
             p["attn"], h, cfg, positions=positions,
             kv_cache=None if cache is None else {"k": cache["k"], "v": cache["v"]},
-            cache_index=cache_index, impl=impl,
+            cache_index=cache_index, impl=half_impl,
         )
         new_cache = {} if new_kv is None else new_kv
     else:
@@ -98,25 +102,31 @@ def block_apply(
             p["mamba"], h, cfg,
             ssm_state=None if cache is None else cache["ssm"],
             conv_state=None if cache is None else cache["conv"],
-            use_pallas=(impl == "pallas"),
+            use_pallas=(half_impl == "pallas"),
         )
         new_cache = {"ssm": new_ssm, "conv": new_conv}
         if cache is None:
             new_cache = {}
     x = x + out
     if has_mlp:
-        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
         if is_moe:
             from repro.distribution.context import moe_a2a_enabled
             from repro.models.moe_a2a import a2a_applicable, moe_apply_a2a
 
+            h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
             if moe_a2a_enabled() and a2a_applicable(cfg):
                 y, aux = moe_apply_a2a(p["moe"], h2, cfg)
             else:
                 y, aux = L.moe_apply(p["moe"], h2, cfg)
+            x = x + y
+        elif impl == "pallas_stage":
+            from repro.kernels.stage_block import stage_mlp_block
+
+            x = stage_mlp_block(p["norm2"], p["mlp"], x,
+                                activation=cfg.activation, eps=cfg.norm_eps)
         else:
-            y = L.mlp_apply(p["mlp"], h2, cfg.activation)
-        x = x + y
+            x = L.mlp_block(p["norm2"], p["mlp"], x, cfg.activation,
+                            cfg.norm_eps)
     return x, new_cache, aux
 
 

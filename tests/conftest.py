@@ -18,7 +18,18 @@ def pytest_configure(config):
         "markers",
         "seed_broken: failing since the repo seed (shard_map/jax-version "
         "breakage in subsystems untouched since then); excluded from the CI "
-        "gate - remove the mark when the subsystem is fixed",
+        "gate - remove the mark when the subsystem is fixed. The set is "
+        "currently EMPTY: the last member (jamba decode) was diagnosed as "
+        "structural MoE capacity-dropping and split into the jamba_decode "
+        "xfail",
+    )
+    config.addinivalue_line(
+        "markers",
+        "jamba_decode: jamba greedy decode drifts from the teacher-forced "
+        "forward because capacity-bounded MoE token-dropping depends on the "
+        "dispatch-group token count (see test_models_smoke.py); xfail'd, "
+        "with the dropless companion test pinning the SSM/attention cache "
+        "handoff itself as exact",
     )
 
 

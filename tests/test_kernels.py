@@ -176,3 +176,61 @@ def test_model_ssd_pallas_path():
     out, (h1, _) = S.mamba_apply(params, x, cfg, use_pallas=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
     np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), atol=1e-3)
+
+
+STAGE_SHAPES = [
+    # (B, S, D, F, blk)
+    (1, 32, 64, 128, 128),
+    (2, 48, 64, 160, 32),   # ragged rows vs block size
+    (3, 37, 128, 96, 64),   # ragged, F < D
+]
+
+
+@pytest.mark.parametrize("shape", STAGE_SHAPES)
+@pytest.mark.parametrize("activation", ["swiglu", "gelu", "relu2"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stage_mlp_block_forward(shape, activation, dtype):
+    """Fused residual stage kernel vs the models.layers reference."""
+    from repro.kernels.stage_block import stage_mlp_block
+    from repro.models.layers import init_mlp, mlp_block
+
+    b, s, d, f, blk = shape
+    params = init_mlp(jax.random.PRNGKey(0), d, f, activation)
+    norm_w = jnp.ones((d,)) + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (d,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s, d), dtype)
+    out = stage_mlp_block(norm_w, params, x, activation=activation, blk=blk,
+                          interpret=True)
+    ref = mlp_block(norm_w, params, x, activation)
+    assert out.dtype == x.dtype and out.shape == x.shape
+    # bf16 tolerance covers the kernel's EXTRA precision: it accumulates
+    # matmuls in fp32 where the reference rounds between einsums
+    atol = 2e-6 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+def test_stage_mlp_block_grads_match_reference(activation):
+    """With a FIXED cotangent, the kernel's custom VJP runs the reference
+    VJP (same function, same residuals), so params/norm/input grads agree
+    to compilation-level reassociation noise (~1e-7 rel; the two VJPs are
+    compiled into different programs, so bitwise equality is not
+    guaranteed)."""
+    from repro.kernels.stage_block import stage_mlp_block
+    from repro.models.layers import init_mlp, mlp_block
+
+    d, f, b, s = 64, 96, 2, 19
+    params = init_mlp(jax.random.PRNGKey(0), d, f, activation)
+    norm_w = jnp.ones((d,)) * 1.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d))
+    g = jax.random.normal(jax.random.PRNGKey(2), (b, s, d))
+    _, vjp_k = jax.vjp(
+        lambda nw, p, xx: stage_mlp_block(nw, p, xx, activation=activation,
+                                          blk=16, interpret=True),
+        norm_w, params, x)
+    _, vjp_r = jax.vjp(
+        lambda nw, p, xx: mlp_block(nw, p, xx, activation), norm_w, params, x)
+    for a, b_ in zip(jax.tree.leaves(vjp_k(g)), jax.tree.leaves(vjp_r(g))):
+        a, b_ = np.asarray(a, np.float64), np.asarray(b_, np.float64)
+        np.testing.assert_allclose(a, b_, rtol=1e-6,
+                                   atol=1e-6 * max(np.abs(b_).max(), 1e-8))

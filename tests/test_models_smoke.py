@@ -53,16 +53,8 @@ def test_decode_step_with_cache(arch):
     assert jax.tree.structure(caches) == jax.tree.structure(caches2)
 
 
-@pytest.mark.parametrize("arch", [
-    "qwen2.5-3b",
-    "mamba2-370m",
-    # jamba decode drifts from the teacher-forced forward since the seed
-    # (hybrid SSM/attention cache handoff) - tracked as a known failure
-    pytest.param("jamba-v0.1-52b", marks=pytest.mark.seed_broken),
-])
-def test_decode_matches_forward(arch):
-    """Greedy decode logits must match teacher-forced forward logits."""
-    cfg = get_config(arch).reduced()
+def _decode_vs_forward_err(cfg) -> float:
+    """Max |greedy-decode logits - teacher-forced forward logits|."""
     params = init_params(jax.random.PRNGKey(1), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size)
     full_logits, _, _ = forward(params, toks, cfg, remat=False, compute_dtype=jnp.float32)
@@ -76,8 +68,46 @@ def test_decode_matches_forward(arch):
         )
         outs.append(logits)
     dec_logits = jnp.stack(outs, axis=1)  # (1, 8, V)
-    err = jnp.abs(dec_logits - full_logits).max()
-    assert float(err) < 2e-2, float(err)
+    return float(jnp.abs(dec_logits - full_logits).max())
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen2.5-3b",
+    "mamba2-370m",
+    # NOT a cache-handoff bug (the dropless test below pins the handoff):
+    # capacity-bounded MoE dropping depends on the dispatch-group token
+    # count, so teacher-forced forward (8 tokens/group, capacity 5) drops
+    # tokens that single-token decode (capacity >= top_k) never drops.
+    # Structural - decode-consistent capacity would need a router-occupancy
+    # cache plus a capacity fixed against an unknown final length. Tracked
+    # as the jamba_decode xfail.
+    pytest.param("jamba-v0.1-52b", marks=[
+        pytest.mark.jamba_decode,
+        pytest.mark.xfail(
+            reason="MoE capacity token-dropping is dispatch-group-size "
+            "dependent; teacher-forced and decode disagree by design",
+            strict=False,
+        ),
+    ]),
+])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits must match teacher-forced forward logits."""
+    err = _decode_vs_forward_err(get_config(arch).reduced())
+    assert err < 2e-2, err
+
+
+def test_jamba_decode_matches_forward_dropless():
+    """The hybrid SSM/attention cache handoff IS exact: with MoE capacity
+    dropping neutralized (capacity_factor >> 1 admits every token in both
+    group sizes), jamba decode matches the teacher-forced forward. This
+    pins the jamba_decode xfail's diagnosis to capacity-dropping context
+    dependence rather than state handoff."""
+    from dataclasses import replace
+
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=64.0))
+    err = _decode_vs_forward_err(cfg)
+    assert err < 2e-2, err
 
 
 def test_sliding_window_decode():

@@ -18,7 +18,10 @@ from repro.core.splitting import (
     boundary_bits,
     enumerate_boundaries,
     even_boundaries,
+    make_plan_scorer,
     plan_cost,
+    score_plans,
+    stack_boundaries,
     stage_sums,
 )
 from repro.core.channel import NetworkConfig
@@ -64,6 +67,93 @@ def test_plan_cost_monotone_in_bits():
     )
     t2, e2 = plan_cost(prof2, plan, pos, p_tx, decoy, net)
     assert t2 > t1 and e2 > e1
+
+
+def _score_setup(s, seed=0):
+    net = NetworkConfig()
+    u = net.num_devices
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, net.area_m, (u + 1, 2))
+    devices = tuple(range(s - 1)) + (u,)
+    p_tx = np.linspace(0.2, 1.0, s - 1)
+    decoy = np.zeros((s - 1, u + 1))
+    decoy[:, s] = 0.2
+    return net, pos, devices, p_tx, decoy
+
+
+@pytest.mark.parametrize("L,s", [(6, 2), (8, 3), (7, 4)])
+def test_score_plans_matches_plan_cost_full_enumeration(L, s):
+    """The vectorized scorer reproduces the python plan_cost loop over the
+    ENTIRE enumeration (both sides share the hoisted cumulative tables, so
+    the stage sums are identical; remaining diffs are f32 vs host-float64
+    summation order at ~1e-7 relative)."""
+    prof = resnet101_profile(batch=1)
+    net, pos, devices, p_tx, decoy = _score_setup(s)
+    bounds = stack_boundaries(L, s)
+    ref = np.asarray([
+        plan_cost(prof, SplitPlan(tuple(int(x) for x in b), devices), pos,
+                  p_tx, decoy, net)
+        for b in bounds
+    ])
+    t, e = score_plans(prof, bounds, np.asarray(devices), pos, p_tx, decoy, net)
+    np.testing.assert_allclose(np.asarray(t), ref[:, 0], rtol=2e-6)
+    np.testing.assert_allclose(np.asarray(e), ref[:, 1], rtol=2e-6)
+
+
+def test_plan_scorer_single_trace_across_sweeps():
+    """Boundary-sweep recompile audit: re-scoring different boundary
+    batches, positions, powers, AND ScenarioParams values reuses ONE
+    compiled trace (the ISSUE's acceptance pin: trace_count == 1)."""
+    from repro.core.scenario import scenario_from_net
+
+    prof = resnet101_profile(batch=1)
+    net, pos, devices, p_tx, decoy = _score_setup(4)
+    scorer = make_plan_scorer(prof)
+    bounds = stack_boundaries(10, 4)
+    scorer(bounds, np.asarray(devices), pos, p_tx, decoy, net)
+    # boundary sweep: same shape, different cut points
+    scorer(bounds[::-1].copy(), np.asarray(devices), pos, p_tx, decoy, net)
+    # geometry + power sweep
+    scorer(bounds, np.asarray(devices), pos * 0.5, p_tx * 2.0, decoy, net)
+    # scenario sweep (bandwidth + budget changes as pytree leaves)
+    sp = scenario_from_net(net)._replace(
+        bandwidth_hz=jnp.asarray(2e6, jnp.float32),
+        gamma_t=jnp.asarray(4.0, jnp.float32),
+    )
+    scorer(bounds, np.asarray(devices), pos, p_tx, decoy, sp)
+    assert scorer.trace_count[0] == 1
+
+
+def test_env_split_oracle_consistent_with_plan_cost():
+    """The env's device-side split oracle scores the full enumeration and
+    its budget mask agrees with per-plan plan_cost against the budgets."""
+    from repro.core.env import MHSLEnv
+
+    prof = resnet101_profile(batch=1)
+    env = MHSLEnv(profile=prof)
+    net, pos, devices, p_tx, decoy = _score_setup(env.S)
+    oracle = env.make_split_oracle()
+    out = oracle(jnp.asarray(pos), np.asarray(devices), p_tx, decoy)
+    n_plans = math.comb(prof.num_layers - 1, env.S - 1)
+    assert out["boundaries"].shape == (n_plans, env.S)
+    assert out["delay"].shape == (n_plans,)
+    # spot-check a handful of plans against the host reference
+    idx = np.linspace(0, n_plans - 1, 7).astype(int)
+    for i in idx:
+        b = tuple(int(x) for x in out["boundaries"][i])
+        t_ref, e_ref = plan_cost(prof, SplitPlan(b, devices), pos, p_tx,
+                                 decoy, net)
+        np.testing.assert_allclose(float(out["delay"][i]), t_ref, rtol=2e-6)
+        np.testing.assert_allclose(float(out["energy"][i]), e_ref, rtol=2e-6)
+        assert bool(out["feasible"][i]) == (
+            (t_ref <= net.gamma_t) and (e_ref <= net.gamma_e)
+        )
+    # scenario sweep through the oracle stays on the same trace
+    sp = env.scenario()._replace(gamma_t=jnp.asarray(1e9, jnp.float32),
+                                 gamma_e=jnp.asarray(1e9, jnp.float32))
+    out2 = oracle(jnp.asarray(pos), np.asarray(devices), p_tx, decoy, sp)
+    assert bool(out2["feasible"].all())
+    assert oracle.trace_count[0] == 1
 
 
 def test_adamw_optimizes_quadratic():
