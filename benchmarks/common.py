@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -40,28 +41,39 @@ def enable_persistent_cache():
     return cache_dir
 
 
-def record_baseline(entries: dict) -> None:
+def record_baseline(entries: dict, *, force: bool = False) -> list:
     """Merge NEW metric keys into ``BENCH_throughput.json`` (write-once).
 
-    Existing keys are never clobbered by routine runs (set
-    ``BENCH_THROUGHPUT_REFRESH=1`` to deliberately re-record the CALLER'S
-    keys - other benchmarks' entries are always preserved); a newly added
-    metric is backfilled the first time it is measured. Callers skip this
-    entirely in smoke mode.
+    Existing keys are REFUSED, not clobbered: re-recording a key that is
+    already in the baseline requires ``force=True`` (the benchmark CLIs'
+    ``--force``) or ``BENCH_THROUGHPUT_REFRESH=1``, and only the CALLER'S
+    keys are ever rewritten - other benchmarks' entries are always
+    preserved. A newly added metric is backfilled the first time it is
+    measured. Callers skip this entirely in smoke mode. Returns the list
+    of keys actually written.
     """
-    refresh = os.environ.get("BENCH_THROUGHPUT_REFRESH") == "1"
+    refresh = force or os.environ.get("BENCH_THROUGHPUT_REFRESH") == "1"
     if os.path.exists(BASELINE_PATH):
         with open(BASELINE_PATH) as f:
             baseline = json.load(f)
     else:
         baseline = {}
     missing = [k for k in entries if refresh or k not in baseline]
+    refused = [k for k in entries if k not in missing]
+    if refused:
+        print(
+            f"record_baseline: write-once, refusing to overwrite {refused} "
+            "in BENCH_throughput.json (pass --force / force=True or set "
+            "BENCH_THROUGHPUT_REFRESH=1 to re-record)",
+            file=sys.stderr, flush=True,
+        )
     if not missing:
-        return
+        return []
     for k in missing:
         baseline[k] = entries[k]
     with open(BASELINE_PATH, "w") as f:
         json.dump(baseline, f, indent=1, default=float)
+    return missing
 
 
 @dataclass(frozen=True)

@@ -39,6 +39,14 @@ class NetworkConfig:
     num_eaves: int = 2  # E
     area_m: float = 800.0  # 800 x 800 m^2
     bandwidth_hz: float = 1e6  # B = 1 MHz
+    # per-hop link overrides (heterogeneous wireless links). Empty tuple =
+    # every one of the ``max_split - 1`` inter-stage hops runs at
+    # ``bandwidth_hz``; a tuple of length ``max_split - 1`` gives each hop
+    # its own TDMA bandwidth. ``hop_latency_s`` is a fixed per-hop link
+    # latency (propagation + MAC handshake) added to every transmission in
+    # both directions; a scalar applies to all hops.
+    hop_bandwidth: tuple = ()
+    hop_latency: float = 0.0
     noise_dbm_hz: float = -90.0  # N0
     rayleigh_o: float = 1.0  # o
     monitor_prob: float = 0.8  # q_e
@@ -57,6 +65,24 @@ class NetworkConfig:
         # N0 * B in watts
         return 10 ** (self.noise_dbm_hz / 10) * 1e-3 * self.bandwidth_hz
 
+    @property
+    def hop_bandwidth_hz(self) -> np.ndarray:
+        """Per-hop bandwidths, shape ``(max_split - 1,)`` (duck-typed with
+        ``ScenarioParams.hop_bandwidth_hz``)."""
+        h = self.max_split - 1
+        if self.hop_bandwidth:
+            if len(self.hop_bandwidth) != h:
+                raise ValueError(
+                    f"hop_bandwidth needs {h} entries (max_split - 1), "
+                    f"got {len(self.hop_bandwidth)}")
+            return np.asarray(self.hop_bandwidth, np.float64)
+        return np.full(h, self.bandwidth_hz, np.float64)
+
+    @property
+    def hop_latency_s(self) -> np.ndarray:
+        """Per-hop fixed link latencies, shape ``(max_split - 1,)``."""
+        return np.full(self.max_split - 1, self.hop_latency, np.float64)
+
 
 def channel_gain(dist: Array, o: float = 1.0) -> Array:
     """h = o * m^-2 (paper's distance-squared path loss)."""
@@ -69,16 +95,26 @@ def data_rate(
     interferer_p: Array,
     interferer_dist_rx: Array,
     net: NetworkConfig,
+    bandwidth_hz: Array | None = None,
 ) -> Array:
     """Eq. 5: TDMA SINR rate with deceptive-signal interference.
 
     interferer_p: (D,) powers of deceptive devices (0 for inactive).
     interferer_dist_rx: (D,) distances from deceptive devices to receiver.
+    bandwidth_hz: optional per-link bandwidth override (heterogeneous hops);
+    the thermal noise floor N0*B scales with it. ``None`` keeps the
+    config-wide ``net.bandwidth_hz``/``net.noise_w`` with no extra float
+    ops, so legacy callers stay bit-identical.
     """
     sig = p_tx * channel_gain(dist_tx_rx, net.rayleigh_o)
     interf = jnp.sum(interferer_p * channel_gain(interferer_dist_rx, net.rayleigh_o))
-    sinr = sig / (interf + net.noise_w)
-    return net.bandwidth_hz * jnp.log2(1.0 + sinr)
+    if bandwidth_hz is None:
+        bw, noise = net.bandwidth_hz, net.noise_w
+    else:
+        bw = bandwidth_hz
+        noise = net.noise_w * (bw / net.bandwidth_hz)
+    sinr = sig / (interf + noise)
+    return bw * jnp.log2(1.0 + sinr)
 
 
 def tx_time(bits: Array, rate: Array) -> Array:

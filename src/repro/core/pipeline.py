@@ -30,6 +30,28 @@ Two schedules, selected by :class:`PipelineConfig`:
   stage input (depth ``2(S-1)+1`` ring), which is what bounds the stash
   at O(S) activations instead of GPipe's O(M).
 
+Stage handoffs are DOUBLE-BUFFERED by default
+(``PipelineConfig.transport="overlap"``): the scan carry holds the
+wire-dtype SEND buffers produced by the previous tick, and both
+``ppermute`` hops are issued at the top of the tick - before any of the
+tick's block compute - so XLA's async collectives
+(``collective-permute-start``/``-done``) can overlap each hop with the
+slot that does not consume it (the forward hop hides behind the backward
+VJP and vice versa). ``transport="sync"`` keeps the PR-5 barrier shape
+(hops issued after the tick's compute, on its fresh outputs) as the
+measured baseline; both transports consume every buffer on the same tick,
+so they are numerically identical. Activations/cotangents are cast to
+``PipelineConfig.wire_dtype`` before the hop (default: the compute
+dtype), so the wire pays bf16 bytes even when stages accumulate in fp32 -
+the paper's Eq. 1/4 transmissions priced per
+``repro.core.transport``'s link model.
+
+A 2-D (stage x env) mesh (``launch.mesh.make_stage_env_mesh``) composes
+this pipeline with data parallelism: pass ``env_axis`` and the
+microbatch-row dim of ``tokens``/``labels`` shards over ``env`` while
+stage params replicate across it; loss and grads are ``pmean``-ed over
+the env axis after the stage ``psum``.
+
 Uneven splits (the RL agent's choice!) are supported by padding every
 stage to the longest stage with zero-initialized blocks: residual blocks
 with zeroed projections are exact identities, so the pipeline computes the
@@ -46,6 +68,7 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -66,26 +89,73 @@ class PipelineConfig:
     ``models.layers``; ``"pallas"`` routes the residual MLP half-block
     through the fused Pallas stage kernel
     (``repro.kernels.stage_block``, interpret-mode on CPU).
+    ``transport``: ``"overlap"`` (double-buffered handoff, hops issued at
+    the top of the tick on the previous tick's send buffers) or ``"sync"``
+    (hops issued after the tick's compute - the PR-5 barrier baseline).
+    ``wire_dtype``: dtype activations/cotangents are cast to before each
+    ``ppermute`` hop; ``None`` keeps them in ``compute_dtype`` (no cast,
+    bit-identical to the seed executor).
     """
 
     schedule: str = "1f1b"
     stage_impl: str = "reference"
-    # activation dtype on the wire and in stage compute. bf16 is the
-    # production default; the grad-parity tests pin both schedules at f32,
-    # where reassociation noise drops below the 2e-5 gate.
+    # activation dtype in stage compute. bf16 is the production default;
+    # the grad-parity tests pin both schedules at f32, where reassociation
+    # noise drops below the 2e-5 gate.
     compute_dtype: str = "bfloat16"
+    # activation/cotangent dtype ON THE WIRE (the ppermute payload).
+    # None -> compute_dtype. Setting e.g. "bfloat16" under fp32 compute
+    # halves Eq. 1/4 hop bytes at a quantization cost the parity tests
+    # bound.
+    wire_dtype: Optional[str] = None
+    transport: str = "overlap"
 
     @property
     def dtype(self):
         return jnp.dtype(self.compute_dtype)
 
     @property
+    def wire(self):
+        return jnp.dtype(self.wire_dtype or self.compute_dtype)
+
+    @property
     def block_impl(self) -> str:
         assert self.stage_impl in ("reference", "pallas"), self.stage_impl
         return "pallas_stage" if self.stage_impl == "pallas" else "auto"
 
+    def __post_init__(self):
+        if self.transport not in ("overlap", "sync"):
+            raise ValueError(
+                f"transport must be 'overlap' or 'sync', got {self.transport!r}")
+
+
+def _check_boundaries(boundaries: Sequence[int],
+                      num_layers: Optional[int] = None) -> None:
+    """Validate split-plan cut points before they reach the executor.
+
+    ``boundaries`` are CUMULATIVE layer counts: strictly increasing,
+    positive, and (when the layer count is known) ending exactly at
+    ``num_layers``. A malformed plan would otherwise produce silently
+    empty or overlapping stages deep inside ``shard_map``.
+    """
+    bl = list(boundaries)
+    if not bl:
+        raise ValueError("boundaries must be non-empty")
+    lo = 0
+    for k, b in enumerate(bl):
+        if int(b) <= lo:
+            raise ValueError(
+                "boundaries must be strictly increasing positive cut points; "
+                f"got {tuple(bl)} (entry {k} = {b} after {lo})")
+        lo = int(b)
+    if num_layers is not None and lo != num_layers:
+        raise ValueError(
+            f"last boundary must equal the layer count {num_layers}; "
+            f"got {tuple(bl)}")
+
 
 def stage_lengths(boundaries: Sequence[int]) -> Tuple[int, ...]:
+    _check_boundaries(boundaries)
     out, lo = [], 0
     for b in boundaries:
         out.append(b - lo)
@@ -98,24 +168,33 @@ def restack_for_stages(slot_params, boundaries: Sequence[int]):
 
     Zero-padded blocks are exact identity functions of the residual stream
     (all projections zero => zero update).
+
+    Implemented as ONE constant-index gather + mask rather than per-stage
+    slice/concat/stack: under jit, GSPMD must repartition this op's output
+    onto the pipeline mesh's stage axis, and XLA's SPMD partitioner
+    miscompiles the concat-of-slices form on multi-axis (stage x env)
+    meshes (wrong layer rows land on stages). A single gather with a
+    host-constant index partitions correctly everywhere.
     """
+    num_layers = int(jax.tree.leaves(slot_params)[0].shape[0])
+    _check_boundaries(boundaries, num_layers=num_layers)
     s = len(boundaries)
     lens = stage_lengths(boundaries)
     max_len = max(lens)
+    idx = np.zeros((s, max_len), np.int32)
+    mask = np.zeros((s, max_len), bool)
+    lo = 0
+    for k, b in enumerate(boundaries):
+        idx[k, : b - lo] = np.arange(lo, b)
+        mask[k, : b - lo] = True
+        lo = b
+    idx_f = jnp.asarray(idx.reshape(-1))
+    mask_f = jnp.asarray(mask.reshape(-1))
 
     def one(a):
-        parts = []
-        lo = 0
-        for k, b in enumerate(boundaries):
-            seg = a[lo:b]
-            pad = max_len - (b - lo)
-            if pad:
-                seg = jnp.concatenate(
-                    [seg, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0
-                )
-            parts.append(seg)
-            lo = b
-        return jnp.stack(parts)  # (S, max_len, ...)
+        out = jnp.take(a, idx_f, axis=0)
+        m = mask_f.reshape((s * max_len,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, out, 0).reshape((s, max_len) + a.shape[1:])
 
     return jax.tree.map(one, slot_params)
 
@@ -126,18 +205,27 @@ def unstack_stage_grads(stage_grads, boundaries: Sequence[int]):
     Inverse of :func:`restack_for_stages`; the zero-padding rows are
     dropped (their gradients are exact zeros - the padded blocks touch
     the residual stream through zeroed projections on both sides).
+    Gather-based for the same SPMD-partitioner reason as
+    :func:`restack_for_stages`.
     """
     lens = stage_lengths(boundaries)
+    s, max_len = len(lens), max(lens)
+    idx = jnp.asarray(
+        np.concatenate([k * max_len + np.arange(n) for k, n in enumerate(lens)]),
+        jnp.int32,
+    )
 
     def one(a):
-        return jnp.concatenate([a[k, : lens[k]] for k in range(len(lens))], axis=0)
+        flat = a.reshape((s * max_len,) + a.shape[2:])
+        return jnp.take(flat, idx, axis=0)
 
     return jax.tree.map(one, stage_grads)
 
 
 def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                      n_microbatches: int, stage_axis: str = "stage",
-                     pipe: Optional[PipelineConfig] = None):
+                     pipe: Optional[PipelineConfig] = None,
+                     env_axis: Optional[str] = None):
     """Build the fill-drain (GPipe) pipelined LM loss - the REFERENCE path.
 
     (params, tokens, labels) -> scalar loss; backward comes from
@@ -146,6 +234,10 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     blocks and ppermutes the activation to the next stage. The 1F1B
     executor (:func:`pipeline_step_fn`) is gradient-compatible with this
     function at rtol <= 2e-5 and is what the benchmarks race against it.
+
+    ``env_axis``: on a 2-D (stage x env) mesh, shard the microbatch ROW
+    dim over this axis (data parallelism composed with the pipeline);
+    the loss is ``pmean``-ed over it.
     """
     sig = M.signature(cfg)
     period = M.find_period(sig)
@@ -155,16 +247,21 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     max_len = max(stage_lengths(boundaries))
     blk_impl = pipe.block_impl if pipe is not None else "auto"
     act_dtype = pipe.dtype if pipe is not None else jnp.bfloat16
+    env_size = int(mesh.shape[env_axis]) if env_axis is not None else 1
 
     def fn(params, tokens, labels):
         stage_blocks = restack_for_stages(params["slots"][0], boundaries)
         m_total, t_len = tokens.shape
         mb = m_total // n_microbatches
+        if mb % env_size:
+            raise ValueError(
+                f"microbatch size {mb} must divide over env axis ({env_size})")
         tok_mb = tokens.reshape(n_microbatches, mb, t_len)
         lab_mb = labels.reshape(n_microbatches, mb, t_len)
 
         def per_stage(stage_blocks, tok_mb, lab_mb, embed, final_norm, head):
             stage_blocks = jax.tree.map(lambda a: a[0], stage_blocks)  # drop S dim
+            mb = tok_mb.shape[1]  # LOCAL rows (sharded over env_axis)
             sidx = jax.lax.axis_index(stage_axis)
             positions = jnp.arange(t_len)
 
@@ -211,15 +308,19 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
             # broadcast the last stage's mean loss to everyone
             total = jax.lax.psum(loss_acc, stage_axis)
             cnt = jax.lax.psum(nloss, stage_axis)
-            return (total / jnp.maximum(cnt, 1.0))[0]
+            loss = (total / jnp.maximum(cnt, 1.0))[0]
+            if env_axis is not None:
+                loss = jax.lax.pmean(loss, env_axis)
+            return loss
 
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        data_spec = P(None, env_axis) if env_axis is not None else P()
         loss = shard_map(
             per_stage,
             mesh=mesh,
             in_specs=(
                 jax.tree.map(lambda _: P(stage_axis), stage_blocks),
-                P(), P(), P(), P(), P(),
+                data_spec, data_spec, P(), P(), P(),
             ),
             out_specs=P(),
             check_rep=False,
@@ -231,7 +332,8 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
 
 def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                      n_microbatches: int, stage_axis: str = "stage",
-                     pipe: PipelineConfig = PipelineConfig()):
+                     pipe: PipelineConfig = PipelineConfig(),
+                     env_axis: Optional[str] = None):
     """Build the pipelined train step: (params, tokens, labels) -> (loss, grads).
 
     ``pipe.schedule == "1f1b"`` runs the interleaved schedule described in
@@ -257,10 +359,20 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     * per-stage block grads accumulate sharded (out_spec along the stage
       axis) and are re-laid-out to the (L, ...) slot layout host-side;
       embed/final-norm/head grads are psum'd across stages.
+    * ``pipe.transport`` picks the handoff: ``"overlap"`` carries the
+      wire-dtype send buffers through the scan and issues both
+      ``ppermute``s at the TOP of the next tick (before its compute, so
+      XLA can run them as async collectives under the opposite slot);
+      ``"sync"`` hops at the end of the tick on its fresh outputs. Both
+      consume each buffer exactly one tick after it is produced, so they
+      compute the same function.
+    * ``env_axis``: on a 2-D (stage x env) mesh, shard the microbatch ROW
+      dim over this axis; loss and grads are ``pmean``-ed over it after
+      the stage-axis reductions.
     """
     if pipe.schedule == "fill_drain":
         loss_fn = pipeline_loss_fn(cfg, mesh, boundaries, n_microbatches,
-                                   stage_axis, pipe=pipe)
+                                   stage_axis, pipe=pipe, env_axis=env_axis)
 
         def fd_step(params, tokens, labels):
             return jax.value_and_grad(loss_fn)(params, tokens, labels)
@@ -279,12 +391,18 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     n_ticks = m_micro + 2 * (s_stages - 1)
     depth = 2 * (s_stages - 1) + 1  # activation-stash ring depth
     blk_impl = pipe.block_impl
+    wdtype = pipe.wire
+    overlap = pipe.transport == "overlap"
+    env_size = int(mesh.shape[env_axis]) if env_axis is not None else 1
 
     def fn(params, tokens, labels):
         stage_blocks = restack_for_stages(params["slots"][0], boundaries)
         lens_arr = jnp.asarray(lens, jnp.int32)
         m_total, t_len = tokens.shape
         mb = m_total // m_micro
+        if mb % env_size:
+            raise ValueError(
+                f"microbatch size {mb} must divide over env axis ({env_size})")
         tok_mb = tokens.reshape(m_micro, mb, t_len)
         lab_mb = labels.reshape(m_micro, mb, t_len)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -292,6 +410,7 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
         def per_stage(stage_blocks, lens_arr, tok_mb, lab_mb, embed,
                       final_norm, head):
             stage_blocks = jax.tree.map(lambda a: a[0], stage_blocks)
+            mb = tok_mb.shape[1]  # LOCAL rows (sharded over env_axis)
             active_len = lens_arr[0]
             sidx = jax.lax.axis_index(stage_axis)
             is_first = sidx == 0
@@ -325,9 +444,25 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                 return M.softmax_xent(logits, lab)
 
             zero_blocks = jax.tree.map(jnp.zeros_like, stage_blocks)
+            perm_f = [(i, (i + 1) % s_stages) for i in range(s_stages)]
+            perm_b = [(i, (i - 1) % s_stages) for i in range(s_stages)]
 
             def tick(carry, t):
-                x_in, g_in, stash, gblocks, gembed, gnorm, ghead, loss_acc = carry
+                buf_x, buf_g, stash, gblocks, gembed, gnorm, ghead, loss_acc = carry
+
+                # ---- the hops (Eq. 1 forward, Eq. 4 gradient) -------------
+                # overlap: the carry holds LAST tick's wire-dtype send
+                # buffers; issuing both ppermutes here, before any of this
+                # tick's block compute, lets XLA schedule them as async
+                # collective-permute-start/done pairs that run under the
+                # slot that does not consume them.
+                if overlap:
+                    x_in = jax.lax.ppermute(
+                        buf_x, stage_axis, perm_f).astype(pipe.dtype)
+                    g_in = jax.lax.ppermute(
+                        buf_g, stage_axis, perm_b).astype(pipe.dtype)
+                else:
+                    x_in, g_in = buf_x, buf_g
 
                 # ---- forward slot: microbatch t - i -----------------------
                 mf = t - sidx
@@ -415,17 +550,23 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                     gembed,
                 )
 
-                # ---- the hops (Eq. 1 forward, Eq. 4 gradient) -------------
-                perm_f = [(i, (i + 1) % s_stages) for i in range(s_stages)]
-                perm_b = [(i, (i - 1) % s_stages) for i in range(s_stages)]
-                x_next = jax.lax.ppermute(y, stage_axis, perm_f)
-                g_next = jax.lax.ppermute(dx, stage_axis, perm_b)
+                if overlap:
+                    # stage outputs become NEXT tick's in-flight buffers
+                    x_next = y.astype(wdtype)
+                    g_next = dx.astype(wdtype)
+                else:
+                    # synchronous handoff: hop now, on this tick's outputs
+                    x_next = jax.lax.ppermute(
+                        y.astype(wdtype), stage_axis, perm_f).astype(pipe.dtype)
+                    g_next = jax.lax.ppermute(
+                        dx.astype(wdtype), stage_axis, perm_b).astype(pipe.dtype)
                 return (x_next, g_next, stash, gblocks, gembed, gnorm, ghead,
                         loss_acc), None
 
-            x0 = jnp.zeros((mb, t_len, cfg.d_model), pipe.dtype)
+            buf_dtype = wdtype if overlap else pipe.dtype
+            x0 = jnp.zeros((mb, t_len, cfg.d_model), buf_dtype)
             g0 = jnp.zeros_like(x0)
-            stash0 = jnp.zeros((depth,) + x0.shape, x0.dtype)
+            stash0 = jnp.zeros((depth, mb, t_len, cfg.d_model), pipe.dtype)
             carry0 = (
                 x0, g0, stash0,
                 jax.tree.map(jnp.zeros_like, stage_blocks),
@@ -441,15 +582,24 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
             gembed = jax.lax.psum(gembed, stage_axis)
             gnorm = jax.lax.psum(gnorm, stage_axis)
             ghead = jax.lax.psum(ghead, stage_axis)
+            if env_axis is not None:
+                # data-parallel reduction: every env shard saw mb/env_size
+                # rows of each microbatch, so the mean-of-means is the mean
+                loss = jax.lax.pmean(loss, env_axis)
+                gblocks = jax.lax.pmean(gblocks, env_axis)
+                gembed = jax.lax.pmean(gembed, env_axis)
+                gnorm = jax.lax.pmean(gnorm, env_axis)
+                ghead = jax.lax.pmean(ghead, env_axis)
             return (loss, jax.tree.map(lambda a: a[None], gblocks), gembed,
                     gnorm, ghead)
 
+        data_spec = P(None, env_axis) if env_axis is not None else P()
         loss, gstages, gembed, gnorm, ghead = shard_map(
             per_stage,
             mesh=mesh,
             in_specs=(
                 jax.tree.map(lambda _: P(stage_axis), stage_blocks),
-                P(stage_axis), P(), P(), P(), P(), P(),
+                P(stage_axis), data_spec, data_spec, P(), P(), P(),
             ),
             out_specs=(
                 P(),

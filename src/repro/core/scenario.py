@@ -64,6 +64,13 @@ class ScenarioParams(NamedTuple):
     theta_chip: Array  # () vartheta chip energy coefficient
     lambda_f: Array  # () Eq. 8 complexity multiplier (seed applied 1.0)
     lambda_b: Array  # () Eq. 9 complexity multiplier (seed applied 1.0)
+    # per-hop link model (heterogeneous wireless links between consecutive
+    # stages): hop k of a plan transmits at hop_bandwidth_hz[k] (thermal
+    # noise scales with it) and pays a fixed hop_latency_s[k] on every
+    # activation/cotangent transmission. Defaults (full(bandwidth_hz),
+    # zeros) reproduce the uniform-link seed physics bit-exactly.
+    hop_bandwidth_hz: Array  # (max_split - 1,)
+    hop_latency_s: Array  # (max_split - 1,)
 
     @property
     def num_eaves(self) -> int:
@@ -72,6 +79,10 @@ class ScenarioParams(NamedTuple):
     @property
     def num_power_levels(self) -> int:
         return self.power_levels.shape[-1]
+
+    @property
+    def num_hops(self) -> int:
+        return self.hop_bandwidth_hz.shape[-1]
 
 
 def scenario_from_net(
@@ -108,6 +119,8 @@ def scenario_from_net(
         theta_chip=jnp.asarray(net.theta_chip, jnp.float32),
         lambda_f=jnp.asarray(1.0, jnp.float32),
         lambda_b=jnp.asarray(1.0, jnp.float32),
+        hop_bandwidth_hz=jnp.asarray(net.hop_bandwidth_hz, jnp.float32),
+        hop_latency_s=jnp.asarray(net.hop_latency_s, jnp.float32),
     )
 
 

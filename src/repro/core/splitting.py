@@ -75,6 +75,89 @@ def boundary_bits(profile: LayerProfile, boundaries: Sequence[int], field: str) 
     return np.asarray([arr[b - 1] * 8.0 for b in boundaries[:-1]])
 
 
+def _hop_link(net, num_hops: int):
+    """Per-hop (bandwidth_hz, latency_s) arrays for the first ``num_hops``
+    inter-stage links.
+
+    Duck-typed over ``NetworkConfig`` (host numpy properties) and
+    ``ScenarioParams`` (jnp leaves); both expose ``hop_bandwidth_hz`` /
+    ``hop_latency_s`` sized ``max_split - 1``, which bounds the hop count
+    of any feasible plan.
+    """
+    bw, lat = net.hop_bandwidth_hz, net.hop_latency_s
+    if bw.shape[-1] < num_hops:
+        raise ValueError(
+            f"link model has {bw.shape[-1]} hops, plan needs {num_hops}")
+    return bw[:num_hops], lat[:num_hops]
+
+
+def plan_cost_parts(
+    profile: LayerProfile,
+    plan: SplitPlan,
+    positions: np.ndarray,  # (U+1, 2) device positions (last row = server)
+    p_tx: np.ndarray,  # (S-1,) trainer power per forward hop
+    decoy_power: np.ndarray,  # (S-1, U+1) decoy powers per hop (0 = inactive)
+    net: NetworkConfig,
+) -> dict:
+    """Per-stage / per-hop breakdown of :func:`plan_cost` (host floats).
+
+    Returns ``t_comp_fwd``/``t_comp_bwd`` ``(S,)`` stage compute times,
+    ``t_hop_fwd``/``t_hop_bwd`` ``(S-1,)`` per-hop transmission times
+    (Eq. 6-7 at the hop's link bandwidth, plus its fixed link latency),
+    and ``e_comp``/``e_tx`` energies. The split executor's transport tick
+    model (``repro.core.transport``) consumes these directly, which is
+    what pins the executor's simulated time to the Eq. 10/11 oracle.
+    """
+    s = plan.num_stages
+    tab = profile_table(profile)
+    b = np.asarray(plan.boundaries, np.int64)
+    lo = np.concatenate([[0], b[:-1]])
+    fwd = tab.fwd_cum[b] - tab.fwd_cum[lo]
+    bwd = tab.bwd_cum[b] - tab.bwd_cum[lo]
+    act_bits = tab.act_bits[b[:-1] - 1]
+    grad_bits = tab.grad_bits[b[:-1] - 1]
+    hop_bw, hop_lat = _hop_link(net, s - 1)
+
+    t_comp_fwd = np.zeros(s)
+    t_comp_bwd = np.zeros(s)
+    e_comp = 0.0
+    for k in range(s):
+        t_comp_fwd[k] = float(compute_time_fwd(fwd[k], net))
+        t_comp_bwd[k] = float(compute_time_bwd(bwd[k], net))
+        e_comp += float(compute_energy(fwd[k] + bwd[k], net))
+    t_hop_fwd = np.zeros(max(s - 1, 0))
+    t_hop_bwd = np.zeros(max(s - 1, 0))
+    e_tx = 0.0
+    for k in range(s - 1):
+        tx, rx = plan.devices[k], plan.devices[k + 1]
+        d_tx_rx = float(np.linalg.norm(positions[tx] - positions[rx]))
+        d_dec_rx = np.linalg.norm(positions - positions[rx], axis=1)
+        # forward hop
+        r = float(
+            data_rate(p_tx[k], d_tx_rx, jnp.asarray(decoy_power[k]),
+                      jnp.asarray(d_dec_rx), net,
+                      bandwidth_hz=float(hop_bw[k]))
+        )
+        t_f = float(tx_time(act_bits[k], r)) + float(hop_lat[k])
+        # gradient hop (reverse direction, same powers)
+        d_dec_tx = np.linalg.norm(positions - positions[tx], axis=1)
+        r_b = float(
+            data_rate(p_tx[k], d_tx_rx, jnp.asarray(decoy_power[k]),
+                      jnp.asarray(d_dec_tx), net,
+                      bandwidth_hz=float(hop_bw[k]))
+        )
+        t_b = float(tx_time(grad_bits[k], r_b)) + float(hop_lat[k])
+        t_hop_fwd[k] = t_f
+        t_hop_bwd[k] = t_b
+        # the radio is on for the whole hop (latency included)
+        e_tx += (float(p_tx[k]) + float(decoy_power[k].sum())) * (t_f + t_b)
+    return {
+        "t_comp_fwd": t_comp_fwd, "t_comp_bwd": t_comp_bwd,
+        "t_hop_fwd": t_hop_fwd, "t_hop_bwd": t_hop_bwd,
+        "e_comp": e_comp, "e_tx": e_tx,
+    }
+
+
 def plan_cost(
     profile: LayerProfile,
     plan: SplitPlan,
@@ -89,41 +172,15 @@ def plan_cost(
     choose per-hop powers; this helper is the static-cost oracle). The
     per-stage FLOP sums come from the cached :func:`profile_table`
     cumulative tables, so repeated calls do not re-derive each profile
-    field per stage.
+    field per stage. Hop transmissions run at the per-hop link bandwidth /
+    latency of ``net``'s link model (uniform ``bandwidth_hz`` / zero
+    latency by default). See :func:`plan_cost_parts` for the breakdown.
     """
-    s = plan.num_stages
-    tab = profile_table(profile)
-    b = np.asarray(plan.boundaries, np.int64)
-    lo = np.concatenate([[0], b[:-1]])
-    fwd = tab.fwd_cum[b] - tab.fwd_cum[lo]
-    bwd = tab.bwd_cum[b] - tab.bwd_cum[lo]
-    act_bits = tab.act_bits[b[:-1] - 1]
-    grad_bits = tab.grad_bits[b[:-1] - 1]
-
-    t_total = 0.0
-    e_total = 0.0
-    for k in range(s):
-        t_total += float(compute_time_fwd(fwd[k], net))
-        t_total += float(compute_time_bwd(bwd[k], net))
-        e_total += float(compute_energy(fwd[k] + bwd[k], net))
-    for k in range(s - 1):
-        tx, rx = plan.devices[k], plan.devices[k + 1]
-        d_tx_rx = float(np.linalg.norm(positions[tx] - positions[rx]))
-        d_dec_rx = np.linalg.norm(positions - positions[rx], axis=1)
-        # forward hop
-        r = float(
-            data_rate(p_tx[k], d_tx_rx, jnp.asarray(decoy_power[k]), jnp.asarray(d_dec_rx), net)
-        )
-        t_f = float(tx_time(act_bits[k], r))
-        # gradient hop (reverse direction, same powers)
-        d_dec_tx = np.linalg.norm(positions - positions[tx], axis=1)
-        r_b = float(
-            data_rate(p_tx[k], d_tx_rx, jnp.asarray(decoy_power[k]), jnp.asarray(d_dec_tx), net)
-        )
-        t_b = float(tx_time(grad_bits[k], r_b))
-        t_total += t_f + t_b
-        e_total += (float(p_tx[k]) + float(decoy_power[k].sum())) * (t_f + t_b)
-    return t_total, e_total
+    parts = plan_cost_parts(profile, plan, positions, p_tx, decoy_power, net)
+    t_total = (parts["t_comp_fwd"].sum() + parts["t_comp_bwd"].sum()
+               + parts["t_hop_fwd"].sum() + parts["t_hop_bwd"].sum())
+    e_total = parts["e_comp"] + parts["e_tx"]
+    return float(t_total), float(e_total)
 
 
 def enumerate_boundaries(num_layers: int, s: int) -> Iterator[Tuple[int, ...]]:
@@ -177,16 +234,22 @@ def _score_one(consts, boundaries, devices, positions, p_tx, decoy, sp):
     ).sum()
     e_comp = compute_energy(fwd + bwd, sp).sum()
 
+    s = boundaries.shape[0]
+    hop_bw = sp.hop_bandwidth_hz[: s - 1]
+    hop_lat = sp.hop_latency_s[: s - 1]
     tx_pos = positions[devices[:-1]]  # (S-1, 2)
     rx_pos = positions[devices[1:]]
     d_tx_rx = jnp.linalg.norm(tx_pos - rx_pos, axis=-1)
     d_dec_rx = jnp.linalg.norm(positions[None, :, :] - rx_pos[:, None, :], axis=-1)
     d_dec_tx = jnp.linalg.norm(positions[None, :, :] - tx_pos[:, None, :], axis=-1)
-    rate = jax.vmap(lambda p, d, ip, idist: data_rate(p, d, ip, idist, sp))
-    r_f = rate(p_tx, d_tx_rx, decoy, d_dec_rx)
-    r_b = rate(p_tx, d_tx_rx, decoy, d_dec_tx)
-    t_f = tx_time(act_bits, r_f)
-    t_b = tx_time(grad_bits, r_b)
+    rate = jax.vmap(
+        lambda p, d, ip, idist, bw: data_rate(p, d, ip, idist, sp,
+                                              bandwidth_hz=bw)
+    )
+    r_f = rate(p_tx, d_tx_rx, decoy, d_dec_rx, hop_bw)
+    r_b = rate(p_tx, d_tx_rx, decoy, d_dec_tx, hop_bw)
+    t_f = tx_time(act_bits, r_f) + hop_lat
+    t_b = tx_time(grad_bits, r_b) + hop_lat
     t_total = t_comp + (t_f + t_b).sum()
     e_total = e_comp + ((p_tx + decoy.sum(-1)) * (t_f + t_b)).sum()
     return t_total, e_total
@@ -229,6 +292,10 @@ def make_plan_scorer(profile: LayerProfile):
         sp = net if isinstance(net, ScenarioParams) else scenario_from_net(net)
         boundaries = jnp.asarray(boundaries, jnp.int32)
         n, s = boundaries.shape
+        if s - 1 > sp.hop_bandwidth_hz.shape[-1]:
+            raise ValueError(
+                f"link model has {sp.hop_bandwidth_hz.shape[-1]} hops, "
+                f"plans need {s - 1}")
         devices = jnp.broadcast_to(jnp.asarray(devices, jnp.int32), (n, s))
         p_tx = jnp.broadcast_to(
             jnp.asarray(p_tx, jnp.float32), (n, s - 1)

@@ -97,6 +97,31 @@ def replicated_sharding(mesh: Mesh) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# stage x env sharding (split executor on a 2-D mesh)
+# ---------------------------------------------------------------------------
+
+STAGE_AXIS = "stage"
+
+
+def stage_sharding(mesh: Mesh, ndim: int, stage_axis: str = STAGE_AXIS) -> NamedSharding:
+    """Sharding for ``(S, ...)`` stage-stacked arrays (restacked block
+    params, per-stage lengths) on a mesh with a ``stage`` axis: leading dim
+    over the stage axis, replicated along every other axis (in particular
+    along ``env`` on a 2-D stage x env mesh)."""
+    ax = stage_axis if stage_axis in mesh.axis_names else None
+    return named(mesh, ax, *([None] * (ndim - 1)))
+
+
+def microbatch_sharding(mesh: Mesh, ndim: int, env_axis: str = ENV_AXIS) -> NamedSharding:
+    """Sharding for ``(M, mb, ...)`` microbatched data on a 2-D
+    stage x env mesh: microbatch ROWS over the env axis (data parallelism
+    composed with the pipeline), the schedule dim and everything trailing
+    replicated. On a stage-only mesh this degrades to full replication."""
+    ax = env_axis if env_axis in mesh.axis_names else None
+    return named(mesh, None, ax, *([None] * (ndim - 2)))
+
+
+# ---------------------------------------------------------------------------
 # parameter sharding by key path
 # ---------------------------------------------------------------------------
 

@@ -237,6 +237,24 @@ def _parse_flat(hlo_text: str) -> CollectiveStats:
     return stats
 
 
+def pipeline_collective_counts(
+    hlo_text: str, n_ticks: int = 1, *, loop_aware: bool = True
+) -> Dict[str, float]:
+    """Issued-collective counts per pipeline tick, by collective kind.
+
+    The 1F1B executor issues its stage hops (``collective-permute``,
+    possibly split into async ``-start``/``-done`` pairs - only the start
+    is counted) and its loss/grad reductions (``all-reduce``) inside the
+    tick scan; loop-aware parsing multiplies body ops by the scan trip
+    count, and dividing by ``n_ticks`` normalizes to per-tick issue
+    counts. This is the regression surface for the double-buffered
+    transport: overlap moves the hops to the top of the tick but must not
+    issue MORE of them than the synchronous handoff.
+    """
+    stats = parse_collectives(hlo_text, loop_aware=loop_aware)
+    return {k: c / n_ticks for k, c in stats.counts.items()}
+
+
 # ---------------------------------------------------------------------------
 # roofline
 # ---------------------------------------------------------------------------

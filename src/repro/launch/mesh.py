@@ -58,6 +58,32 @@ def make_stage_mesh(n_stages: int, stage_axis: str = "stage"):
     return Mesh(np.array(devs[:n_stages]), (stage_axis,))
 
 
+def make_stage_env_mesh(n_stages: int, n_envs: int | None = None,
+                        stage_axis: str = "stage", env_axis: str = "env"):
+    """2-D (stage x env) mesh: pipelined stage compute per scenario shard.
+
+    Row s, column e holds stage ``s`` of the split model for env shard
+    ``e``: the split executor ppermutes activations along ``stage_axis``
+    (hops pinned to device order, like :func:`make_stage_mesh`) while the
+    population/data axis shards microbatch rows or scenario sweeps along
+    ``env_axis`` - ``distribution.sharding.population_axes`` picks the
+    ``'env'`` axis by NAME, so ``train_population`` drives this mesh
+    unchanged. ``n_envs=None`` takes every remaining device
+    (``len(devices) // n_stages``).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if n_envs is None:
+        n_envs = len(devs) // n_stages
+    need = n_stages * n_envs
+    assert n_envs >= 1 and len(devs) >= need, \
+        f"need {n_stages}x{n_envs} devices, have {len(devs)}"
+    grid = np.array(devs[:need]).reshape(n_stages, n_envs)
+    return Mesh(grid, (stage_axis, env_axis))
+
+
 def make_population_mesh(num_devices: int | None = None, axis: str = "env"):
     """1-D mesh over host devices for the RL engine's population axis.
 

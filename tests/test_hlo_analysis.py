@@ -64,3 +64,55 @@ def test_roofline_dominant():
     assert r.dominant == "collective"
     assert abs(r.compute_s - 1e12 / 197e12) < 1e-9
     assert r.useful_ratio == 0.5
+
+
+def test_pipeline_collective_counts_synthetic():
+    """Per-tick normalization: loop-aware issue counts divided by the
+    schedule's tick count."""
+    from repro.launch.hlo_analysis import pipeline_collective_counts
+
+    per_tick = pipeline_collective_counts(HLO, n_ticks=5)
+    assert per_tick["all-gather"] == 1.0  # 5 loop issues over 5 ticks
+    assert per_tick["all-reduce"] == 1 / 5  # entry-level, outside the loop
+
+
+def test_overlap_issues_no_more_collectives_than_sync(subproc):
+    """Regression gate for the double-buffered transport (satellite d):
+    compiling the overlapped 1F1B executor must not issue more
+    collectives per tick (ppermute hops, psum reductions) than the
+    synchronous handoff - overlap only MOVES the hop to the top of the
+    tick."""
+    out = subproc(
+        """
+import json
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from repro.configs import get_config
+from repro.models import init_params
+from repro.core.pipeline import PipelineConfig, make_stage_mesh, pipeline_step_fn
+from repro.launch.hlo_analysis import pipeline_collective_counts
+
+cfg = replace(get_config('qwen2.5-3b').reduced(), num_layers=4)
+params = init_params(jax.random.PRNGKey(0), cfg)
+mesh = make_stage_mesh(3)
+rng = np.random.default_rng(0)
+m = 3
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (m * 2, 16)), jnp.int32)
+labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (m * 2, 16)), jnp.int32)
+bounds = (1, 3, 4)
+ticks = m + 2 * (len(bounds) - 1)
+counts = {}
+for tr in ('sync', 'overlap'):
+    fn = pipeline_step_fn(cfg, mesh, bounds, m,
+                          pipe=PipelineConfig(transport=tr, compute_dtype='float32'))
+    hlo = jax.jit(fn).lower(params, tokens, labels).compile().as_text()
+    counts[tr] = pipeline_collective_counts(hlo, ticks)
+assert any('permute' in k for k in counts['sync']), counts['sync']
+assert set(counts['overlap']) <= set(counts['sync']), counts
+for kind, sync_n in counts['sync'].items():
+    assert counts['overlap'].get(kind, 0.0) <= sync_n + 1e-9, (kind, counts)
+print('HLO_COUNTS_OK', json.dumps(counts))
+""",
+        n_devices=3,
+    )
+    assert "HLO_COUNTS_OK" in out

@@ -124,6 +124,105 @@ def test_1f1b_pallas_stage_impl_matches_reference():
     _assert_grads_close(g0, g1)
 
 
+def test_boundary_validation():
+    """Malformed split plans are refused with a clear ValueError before
+    they reach shard_map (satellite: stage_lengths/restack_for_stages)."""
+    for bad in [(), (2, 2, 4), (3, 2), (0, 2), (-1, 4)]:
+        with pytest.raises(ValueError):
+            stage_lengths(bad)
+    tree = {"w": jnp.zeros((4, 3))}
+    with pytest.raises(ValueError):
+        restack_for_stages(tree, (1, 3))  # last boundary != num_layers
+    with pytest.raises(ValueError):
+        restack_for_stages(tree, (2, 2, 4))
+    out = restack_for_stages(tree, (1, 4))  # valid: lens 1/3
+    assert out["w"].shape == (2, 3, 3)
+
+
+def test_transport_sync_overlap_bit_identical_multistage(subproc):
+    """The double-buffered handoff consumes every buffer on the same tick
+    as the synchronous one, so loss AND grads must match bit-for-bit; a
+    bf16 wire under f32 compute stays close at bf16 tolerance."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from repro.configs import get_config
+from repro.models import init_params
+from repro.core.pipeline import PipelineConfig, make_stage_mesh, pipeline_step_fn
+
+cfg = replace(get_config('qwen2.5-3b').reduced(), num_layers=4)
+params = init_params(jax.random.PRNGKey(0), cfg)
+mesh = make_stage_mesh(3)
+rng = np.random.default_rng(0)
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (6, 16)), jnp.int32)
+labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (6, 16)), jnp.int32)
+bounds = (1, 3, 4)
+steps = {}
+for tr in ('sync', 'overlap'):
+    fn = pipeline_step_fn(cfg, mesh, bounds, 3,
+                          pipe=PipelineConfig(transport=tr, compute_dtype='float32'))
+    steps[tr] = jax.jit(fn)(params, tokens, labels)
+l_s, g_s = steps['sync']; l_o, g_o = steps['overlap']
+assert float(l_s) == float(l_o), (float(l_s), float(l_o))
+for (path, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(g_s)[0],
+                             jax.tree_util.tree_flatten_with_path(g_o)[0]):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                  err_msg=jax.tree_util.keystr(path))
+# bf16 wire under f32 compute: quantizes each hop, bounded drift
+wire = pipeline_step_fn(cfg, mesh, bounds, 3,
+                        pipe=PipelineConfig(compute_dtype='float32',
+                                            wire_dtype='bfloat16'))
+l_w, g_w = jax.jit(wire)(params, tokens, labels)
+assert abs(float(l_w) - float(l_s)) <= 3e-2 * abs(float(l_s)), (float(l_w), float(l_s))
+print('TRANSPORT_PARITY_OK', float(l_s))
+""",
+        n_devices=3,
+    )
+    assert "TRANSPORT_PARITY_OK" in out
+
+
+def test_1f1b_matches_fill_drain_8stage_uneven(subproc):
+    """S=8 uneven split on a real 8-device stage mesh (satellite c):
+    overlapped 1F1B vs jax.grad of fill-drain, loss + grads."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from repro.configs import get_config
+from repro.models import init_params
+from repro.core.pipeline import PipelineConfig, make_stage_mesh, pipeline_step_fn
+
+cfg = replace(get_config('qwen2.5-3b').reduced(), num_layers=9)
+params = init_params(jax.random.PRNGKey(0), cfg)
+mesh = make_stage_mesh(8)
+rng = np.random.default_rng(0)
+m = 8
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (m, 8)), jnp.int32)
+labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (m, 8)), jnp.int32)
+bounds = (2, 3, 4, 5, 6, 7, 8, 9)  # stage lens 2/1/1/1/1/1/1/1
+fd = pipeline_step_fn(cfg, mesh, bounds, m,
+                      pipe=PipelineConfig(schedule="fill_drain", compute_dtype="float32"))
+f1 = pipeline_step_fn(cfg, mesh, bounds, m,
+                      pipe=PipelineConfig(schedule="1f1b", transport="overlap",
+                                          compute_dtype="float32"))
+l0, g0 = jax.jit(fd)(params, tokens, labels)
+l1, g1 = jax.jit(f1)(params, tokens, labels)
+assert abs(float(l0) - float(l1)) <= 2e-5 * abs(float(l0)), (float(l0), float(l1))
+for (path, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(g0)[0],
+                             jax.tree_util.tree_flatten_with_path(g1)[0]):
+    a = np.asarray(a, np.float64); b = np.asarray(b, np.float64)
+    np.testing.assert_allclose(b, a, rtol=2e-5,
+                               atol=2e-5 * max(np.abs(a).max(), 1e-8),
+                               err_msg=jax.tree_util.keystr(path))
+print('F1B_8STAGE_OK', float(l0))
+""",
+        n_devices=8,
+        timeout=600,
+    )
+    assert "F1B_8STAGE_OK" in out
+
+
 def test_restack_unstack_roundtrip():
     """unstack_stage_grads inverts restack_for_stages for any split."""
     leaf = jnp.arange(5 * 3 * 2, dtype=jnp.float32).reshape(5, 3, 2)

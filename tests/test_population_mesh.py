@@ -105,6 +105,89 @@ print('SHARDED_POPULATION_OK')
     assert "SHARDED_POPULATION_OK" in out
 
 
+def test_pipeline_on_stage_env_mesh_parity(subproc):
+    """2-D (stage x env) mesh: the split executor runs pipelined stage
+    compute with the microbatch rows sharded over the env axis, matching
+    the 1-D stage mesh at f32 tolerance (pmean-of-means reassociation)."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro.models import init_params
+from repro.core.pipeline import PipelineConfig, make_stage_mesh, pipeline_step_fn
+from repro.launch.mesh import make_stage_env_mesh
+from repro.distribution.sharding import (
+    microbatch_sharding, population_axes, stage_sharding,
+)
+
+cfg = replace(get_config('qwen2.5-3b').reduced(), num_layers=4)
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+m = 2
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (m * 4, 16)), jnp.int32)
+labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (m * 4, 16)), jnp.int32)
+bounds = (1, 4)
+pipe = PipelineConfig(compute_dtype='float32')
+l0, g0 = jax.jit(pipeline_step_fn(cfg, make_stage_mesh(2), bounds, m,
+                                  pipe=pipe))(params, tokens, labels)
+
+mesh2 = make_stage_env_mesh(2, 2)
+assert mesh2.devices.shape == (2, 2)
+assert mesh2.axis_names == ('stage', 'env')
+assert population_axes(mesh2, 2) == 'env'  # train_population picks env by name
+assert microbatch_sharding(mesh2, 3).spec == P(None, 'env', None)
+assert stage_sharding(mesh2, 2).spec == P('stage', None)
+l1, g1 = jax.jit(pipeline_step_fn(cfg, mesh2, bounds, m, pipe=pipe,
+                                  env_axis='env'))(params, tokens, labels)
+assert abs(float(l0) - float(l1)) <= 1e-6 * abs(float(l0)), (float(l0), float(l1))
+for (path, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(g0)[0],
+                             jax.tree_util.tree_flatten_with_path(g1)[0]):
+    a = np.asarray(a, np.float64); b = np.asarray(b, np.float64)
+    np.testing.assert_allclose(b, a, rtol=1e-5,
+                               atol=1e-5 * max(np.abs(a).max(), 1e-8),
+                               err_msg=jax.tree_util.keystr(path))
+print('STAGE_ENV_PIPELINE_OK', float(l0))
+""",
+        n_devices=4,
+    )
+    assert "STAGE_ENV_PIPELINE_OK" in out
+
+
+def test_train_population_on_stage_env_mesh(subproc):
+    """train_population drives the 2-D stage x env mesh unchanged: the
+    scenario axis shards over 'env' (picked by name), stage rows stay
+    replicated, and the results match the vmap path exactly."""
+    out = subproc(
+        """
+import jax
+from repro.core.agents.sac import SACConfig
+from repro.core.env import MHSLEnv
+from repro.core.profiles import resnet101_profile
+from repro.core.scenario import scenario_grid, stack_scenarios, train_population
+from repro.launch.mesh import make_stage_env_mesh
+
+env = MHSLEnv(profile=resnet101_profile(batch=1))
+cfg = SACConfig()
+scens = stack_scenarios(scenario_grid(env.scenario(), monitor_prob=[0.3, 0.8]))
+kw = dict(episodes=6, warmup_episodes=3, seed=5, num_envs=2)
+ref = train_population(env, cfg, scens, **kw)
+mesh = make_stage_env_mesh(2, 2)
+shd = train_population(env, cfg, scens, mesh=mesh, **kw)
+leaf = jax.tree.leaves(shd.params)[0]
+assert "env" in leaf.sharding.mesh.axis_names, leaf.sharding
+for s in range(2):
+    assert shd.results[s].episode_reward == ref.results[s].episode_reward, s
+    assert shd.results[s].episode_leak == ref.results[s].episode_leak, s
+print('STAGE_ENV_POPULATION_OK')
+""",
+        n_devices=4,
+        timeout=600,
+    )
+    assert "STAGE_ENV_POPULATION_OK" in out
+
+
 def test_train_sac_checkpoint_resume_bit_identical(env, tmp_path):
     """Save mid-training, resume, and the episode-reward trajectory is
     bit-identical to an uninterrupted run (the paper's long population

@@ -1,0 +1,159 @@
+"""Link-model + structural transport-accounting tests.
+
+Pins the agreement contract between the split executor's tick accounting
+(``repro.core.transport``) and the Eq. 10/11 plan oracle
+(``splitting.plan_cost``): same per-stage compute terms, same per-hop
+transmission terms at each hop's link bandwidth/latency, and at M=1 the
+synchronous 1F1B schedule IS the oracle's serial delay. Also covers the
+per-hop link model itself (heterogeneous bandwidths, fixed latencies,
+validation) through both scoring paths.
+"""
+import numpy as np
+import pytest
+
+from repro.core.channel import NetworkConfig
+from repro.core.profiles import resnet101_profile
+from repro.core.splitting import SplitPlan, make_plan_scorer, plan_cost
+from repro.core.transport import (
+    TransportModel,
+    plan_transport_model,
+    simulate_1f1b,
+    tick_costs,
+)
+
+
+def _setup(s, *, hop_bandwidth=(), hop_latency=0.0, seed=0, num_devices=8,
+           max_split=None):
+    net = NetworkConfig(num_devices=num_devices,
+                        max_split=max_split or max(s, 4),
+                        hop_bandwidth=hop_bandwidth, hop_latency=hop_latency)
+    prof = resnet101_profile(batch=1)
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, net.area_m, (net.num_devices + 1, 2))
+    devices = tuple(range(s - 1)) + (net.num_devices,)
+    bounds = tuple(int(b) for b in np.linspace(4, prof.num_layers, s))
+    plan = SplitPlan(bounds, devices)
+    p_tx = np.full(s - 1, 0.5)
+    decoy = np.zeros((s - 1, net.num_devices + 1))
+    decoy[:, -1] = 0.1
+    return prof, plan, pos, p_tx, decoy, net
+
+
+@pytest.mark.parametrize("s", [2, 4])
+def test_sync_m1_matches_plan_cost(s):
+    """At one microbatch there is nothing to overlap: the executor's
+    synchronous tick accounting must equal the Eq. 10 delay exactly."""
+    prof, plan, pos, p_tx, decoy, net = _setup(
+        s, hop_bandwidth=tuple(1e6 / (k + 1) for k in range(max(s, 4) - 1)),
+        hop_latency=1e-3)
+    t_ref, _ = plan_cost(prof, plan, pos, p_tx, decoy, net)
+    model = plan_transport_model(prof, plan, pos, p_tx, decoy, net)
+    sim = simulate_1f1b(model, 1, transport="sync")
+    np.testing.assert_allclose(sim["total_s"], t_ref, rtol=1e-12)
+
+
+def test_overlap_never_slower_and_bubble():
+    prof, plan, pos, p_tx, decoy, net = _setup(4, hop_latency=2e-3)
+    model = plan_transport_model(prof, plan, pos, p_tx, decoy, net)
+    for m in (1, 2, 4, 8):
+        sync = simulate_1f1b(model, m, transport="sync")
+        ovl = simulate_1f1b(model, m, transport="overlap")
+        # per tick: max(compute, in-flight) <= compute + transport
+        assert ovl["total_s"] <= sync["total_s"] + 1e-12, m
+        s = model.num_stages
+        expect = 2 * (s - 1) / (m + 2 * (s - 1))
+        np.testing.assert_allclose(ovl["bubble_fraction"], expect, rtol=1e-12)
+    with pytest.raises(ValueError):
+        simulate_1f1b(model, 2, transport="eager")
+
+
+def test_heterogeneous_hop_tick_accounting():
+    """Hand-built model, S=3, M=2: each tick's transport is the max over
+    the hops ACTIVE that tick (paired ppermutes fire links concurrently),
+    with per-microbatch tx costs and undivided per-hop latency."""
+    model = TransportModel(
+        t_comp_fwd=np.array([2.0, 4.0, 6.0]),
+        t_comp_bwd=np.array([4.0, 8.0, 12.0]),
+        t_tx_fwd=np.array([10.0, 2.0]),   # hop 0 is the slow link
+        t_tx_bwd=np.array([6.0, 2.0]),
+        hop_latency=np.array([0.5, 0.25]),
+    )
+    m = 2
+    compute, transport = tick_costs(model, m)
+    assert len(compute) == m + 2 * (3 - 1)
+    # tick 0: only stage 0 forwards mb0; only hop 0 carries it
+    np.testing.assert_allclose(compute[0], 2.0 / m)
+    np.testing.assert_allclose(transport[0], 10.0 / m + 0.5)
+    # tick 1: stage 0 fwd mb1 + stage 1 fwd mb0; both forward hops active,
+    # the slow hop 0 dominates
+    np.testing.assert_allclose(compute[1], max(2.0, 4.0) / m)
+    np.testing.assert_allclose(transport[1], max(10.0 / m + 0.5,
+                                                 2.0 / m + 0.25))
+    # tick 2: stage 2 fwd+bwd mb0 back-to-back; hop 1 fwd mb1 vs hop 1
+    # (stage 2 -> 1) cotangent of mb0
+    np.testing.assert_allclose(compute[2], (6.0 + 12.0) / m)
+    np.testing.assert_allclose(transport[2], max(2.0 / m + 0.25,
+                                                 2.0 / m + 0.25))
+    # last tick: only stage 0 backwards the last microbatch; no hops left
+    np.testing.assert_allclose(compute[-1], 4.0 / m)
+    np.testing.assert_allclose(transport[-1], 0.0)
+    # totals: every slot/hop appears exactly once per microbatch
+    sim = simulate_1f1b(model, m, transport="sync")
+    np.testing.assert_allclose(
+        sim["total_s"], compute.sum() + transport.sum(), rtol=1e-12)
+
+
+def test_slower_hop_bandwidth_raises_hop_time():
+    """Halving one hop's bandwidth strictly raises that hop's time in the
+    plan breakdown (rate falls with B even though the noise floor N0*B
+    falls too) and leaves other hops untouched."""
+    from repro.core.splitting import plan_cost_parts
+
+    prof, plan, pos, p_tx, decoy, net0 = _setup(4)
+    base = plan_cost_parts(prof, plan, pos, p_tx, decoy, net0)
+    net1 = NetworkConfig(num_devices=net0.num_devices, max_split=net0.max_split,
+                         hop_bandwidth=(5e5, 1e6, 1e6))
+    slow = plan_cost_parts(prof, plan, pos, p_tx, decoy, net1)
+    assert slow["t_hop_fwd"][0] > base["t_hop_fwd"][0]
+    np.testing.assert_allclose(slow["t_hop_fwd"][1:], base["t_hop_fwd"][1:],
+                               rtol=1e-12)
+
+
+def test_default_link_model_is_bit_identical():
+    """An explicit per-hop bandwidth equal to the base bandwidth and zero
+    latency reproduces the uniform-link plan cost EXACTLY (the noise-floor
+    scale factor is exactly 1.0)."""
+    prof, plan, pos, p_tx, decoy, net0 = _setup(4)
+    net1 = NetworkConfig(num_devices=net0.num_devices, max_split=net0.max_split,
+                         hop_bandwidth=(1e6, 1e6, 1e6), hop_latency=0.0)
+    t0, e0 = plan_cost(prof, plan, pos, p_tx, decoy, net0)
+    t1, e1 = plan_cost(prof, plan, pos, p_tx, decoy, net1)
+    assert t0 == t1 and e0 == e1
+
+
+def test_scorer_matches_plan_cost_heterogeneous():
+    """The jitted vmap scorer and the host plan_cost loop agree under a
+    heterogeneous link ladder (per-hop bandwidths + latency)."""
+    s = 4
+    prof, plan, pos, p_tx, decoy, net = _setup(
+        s, hop_bandwidth=(1e6, 4e5, 7e5), hop_latency=3e-3)
+    t_ref, e_ref = plan_cost(prof, plan, pos, p_tx, decoy, net)
+    scorer = make_plan_scorer(prof)
+    t, e = scorer(np.asarray([plan.boundaries]), np.asarray(plan.devices),
+                  pos, p_tx, decoy, net)
+    np.testing.assert_allclose(float(t[0]), t_ref, rtol=2e-6)
+    np.testing.assert_allclose(float(e[0]), e_ref, rtol=2e-6)
+
+
+def test_link_model_validation():
+    with pytest.raises(ValueError):
+        _ = NetworkConfig(hop_bandwidth=(1e6,), max_split=4).hop_bandwidth_hz
+    # a plan with more hops than the link model is refused by the scorer
+    prof = resnet101_profile(batch=1)
+    net = NetworkConfig(max_split=2)
+    scorer = make_plan_scorer(prof)
+    bounds = np.asarray([[4, 8, prof.num_layers]])
+    with pytest.raises(ValueError):
+        scorer(bounds, np.asarray([0, 1, net.num_devices]),
+               np.zeros((net.num_devices + 1, 2)), np.full(2, 0.5),
+               np.zeros((2, net.num_devices + 1)), net)
