@@ -41,8 +41,14 @@ def enable_persistent_cache():
     return cache_dir
 
 
-def record_baseline(entries: dict, *, force: bool = False) -> list:
-    """Merge NEW metric keys into ``BENCH_throughput.json`` (write-once).
+def record_baseline(entries: dict, *, force: bool = False,
+                    path: str | None = None) -> list:
+    """Merge NEW metric keys into a write-once baseline JSON.
+
+    ``path`` defaults to ``BENCH_throughput.json`` (resolved at call
+    time so tests can monkeypatch ``BASELINE_PATH``); the serving
+    benchmark records into ``BENCH_serving.json`` with the same
+    write-once/--force semantics.
 
     Existing keys are REFUSED, not clobbered: re-recording a key that is
     already in the baseline requires ``force=True`` (the benchmark CLIs'
@@ -52,9 +58,11 @@ def record_baseline(entries: dict, *, force: bool = False) -> list:
     measured. Callers skip this entirely in smoke mode. Returns the list
     of keys actually written.
     """
+    if path is None:
+        path = BASELINE_PATH
     refresh = force or os.environ.get("BENCH_THROUGHPUT_REFRESH") == "1"
-    if os.path.exists(BASELINE_PATH):
-        with open(BASELINE_PATH) as f:
+    if os.path.exists(path):
+        with open(path) as f:
             baseline = json.load(f)
     else:
         baseline = {}
@@ -63,7 +71,7 @@ def record_baseline(entries: dict, *, force: bool = False) -> list:
     if refused:
         print(
             f"record_baseline: write-once, refusing to overwrite {refused} "
-            "in BENCH_throughput.json (pass --force / force=True or set "
+            f"in {os.path.basename(path)} (pass --force / force=True or set "
             "BENCH_THROUGHPUT_REFRESH=1 to re-record)",
             file=sys.stderr, flush=True,
         )
@@ -71,7 +79,7 @@ def record_baseline(entries: dict, *, force: bool = False) -> list:
         return []
     for k in missing:
         baseline[k] = entries[k]
-    with open(BASELINE_PATH, "w") as f:
+    with open(path, "w") as f:
         json.dump(baseline, f, indent=1, default=float)
     return missing
 

@@ -30,6 +30,7 @@ ALL = [
     "roofline",
     "throughput",
     "pipeline",
+    "serving",
 ]
 
 

@@ -1,0 +1,281 @@
+"""Serving benchmarks: continuous batching vs static batches, fused
+decode scan vs the v0 per-token host loop.
+
+Two measurements:
+
+* ``serving`` - the SAME mixed-length Poisson trace served by (a) the
+  static-batch baseline (``launch.serve.run_static``: admit N at a time
+  in arrival order, every row pays the batch max gen length) and (b) the
+  continuous-batching engine (``ServingService``: arrivals admitted into
+  draining slots each tick, one compiled step). Cases cover a 1-stage
+  single-device runner and a multi-stage split plan with per-stage KV
+  rings on forced host devices. Each case runs in a clean subprocess
+  (the forced device count and the tcmalloc LD_PRELOAD both must be set
+  before the backend initializes) and records wall-clock requests/sec,
+  tokens/sec, p50/p99 latency, AND the structural slot-occupancy
+  accounting (useful decode-slot-steps over executed ones) - the
+  occupancy ratio shows the slot-reuse win even where a 2-core CPU host
+  is dispatch-bound. Both sides warm their compiles before the clock
+  starts, and the engine's compiled-trace count is audited (1 trace
+  across arrivals, completions, and drain).
+* ``decode_fusion`` - tok/s of the fused single-dispatch decode
+  (``make_generate_fn``: one ``lax.scan`` over the whole generation) vs
+  the v0 per-token loop (one jitted dispatch + host sync per token),
+  both with warm jits. This is the before/after for folding the host
+  loop into the engine step.
+* CI gate input: bench-smoke reads the per-run JSON and fails if the
+  continuous engine's requests/sec falls below the static baseline's in
+  any stage case.
+
+New baseline keys are recorded write-once into ``BENCH_serving.json``
+(never in ``--smoke``); the shared CSV contract rows still print.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.common import (
+    BenchConfig, emit_csv_row, record_baseline, save_json, REPO_ROOT,
+)
+
+SERVING_BASELINE = os.path.join(REPO_ROOT, "BENCH_serving.json")
+_TCMALLOC = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
+
+
+# Runs ONE case (static + engine on the same trace) in a clean
+# subprocess with a forced host device count. Prints a RESULT json line.
+_SERVE_SNIPPET = """
+import json, os
+import numpy as np
+
+from benchmarks.common import enable_persistent_cache
+
+enable_persistent_cache()  # REPRO_JIT_CACHE_DIR rides the environment
+
+from repro.serving import ServeConfig, ServingService, poisson_trace
+from repro.serving.engine import init_engine_state
+from repro.launch.serve import run_static
+
+SPEC = json.loads(os.environ["SERVE_BENCH_SPEC"])
+cfg = ServeConfig.load(None, SPEC["serve"])
+mc = cfg.model_config()
+trace = poisson_trace(
+    n_requests=SPEC["requests"], rate_per_sec=SPEC["rate"],
+    vocab_size=mc.vocab_size, plen_range=(4, cfg.prompt_pad),
+    gen_range=(4, cfg.max_new), seed=SPEC["seed"])
+warm = poisson_trace(
+    n_requests=2, rate_per_sec=1e9, vocab_size=mc.vocab_size,
+    plen_range=(4, cfg.prompt_pad), gen_range=(2, 4), seed=SPEC["seed"] + 1)
+
+stat = run_static(cfg, trace, warmup=True)
+
+svc = ServingService(cfg)
+svc.run(warm)  # compile the engine step off the clock
+svc.state = init_engine_state(svc.runner, cfg.num_slots, cfg.prompt_pad,
+                              cfg.max_new)
+eng = svc.run(trace)
+
+# both paths run the same (num_slots, prompt_pad) decode shapes at
+# temperature 0, so per-request tokens must agree bitwise
+match = (set(stat["completions"]) == set(eng["completions"]) and all(
+    np.array_equal(stat["completions"][r], eng["completions"][r])
+    for r in stat["completions"]))
+
+drop = ("completions", "latencies", "replans")
+print("RESULT " + json.dumps({
+    "static": {k: v for k, v in stat.items() if k not in drop},
+    "engine": {k: v for k, v in eng.items() if k not in drop},
+    "engine_traces": len(svc.step.trace_count),
+    "tokens_match": bool(match),
+}, default=float))
+"""
+
+
+def _case_env(stages: int) -> dict:
+    """Subprocess env per SNIPPETS 2-3: forced host device count for the
+    stage mesh, tcmalloc preloaded when the box has it, TF log noise
+    off."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={stages}"
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    env["TF_CPP_MIN_LOG_LEVEL"] = "4"
+    if os.path.exists(_TCMALLOC):
+        env["LD_PRELOAD"] = _TCMALLOC
+        env["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = "60000000000"
+    return env
+
+
+def _serving_cases(bench: BenchConfig, seed: int):
+    # Decode-dominated SATURATED load is where continuous batching pays:
+    # short prompts (prefill is a per-arrival cost BOTH sides pay once per
+    # batch), a wide mixed gen-length spread (the static baseline's decode
+    # scan always runs max_new steps, so every early-finishing row drags
+    # dead slot-steps to the batch end), arrival_slots == num_slots (one
+    # batched prefill refills ALL freed slots), and an offered load well
+    # above service capacity so the queue stays non-empty and rps measures
+    # SERVICE throughput - at sub-capacity rates both sides finish right
+    # after the last arrival and rps just reads back the arrival rate.
+    if bench.smoke:
+        cases = [
+            {"name": "1-stage", "stages": 1, "requests": 16, "rate": 512.0,
+             "serve": {"num_slots": 4, "arrival_slots": 4, "prompt_pad": 8,
+                       "max_new": 24, "decode_chunk": 8}},
+            {"name": "2-stage", "stages": 2, "requests": 8, "rate": 512.0,
+             "serve": {"num_slots": 4, "arrival_slots": 4, "prompt_pad": 8,
+                       "max_new": 16, "decode_chunk": 8,
+                       "boundaries": [1, 2]}},
+        ]
+    else:
+        cases = [
+            {"name": "1-stage", "stages": 1, "requests": 48, "rate": 512.0,
+             "serve": {"num_slots": 8, "arrival_slots": 8, "prompt_pad": 8,
+                       "max_new": 48, "decode_chunk": 12}},
+            {"name": "2-stage", "stages": 2, "requests": 16, "rate": 512.0,
+             "serve": {"num_slots": 4, "arrival_slots": 4, "prompt_pad": 8,
+                       "max_new": 32, "decode_chunk": 8,
+                       "boundaries": [1, 2]}},
+        ]
+    rows = []
+    for case in cases:
+        spec = {"requests": case["requests"], "rate": case["rate"],
+                "seed": seed, "serve": dict(case["serve"], seed=seed)}
+        env = _case_env(case["stages"])
+        env["SERVE_BENCH_SPEC"] = json.dumps(spec)
+        res = subprocess.run([sys.executable, "-c", _SERVE_SNIPPET],
+                             capture_output=True, text=True, timeout=3000,
+                             env=env, cwd=REPO_ROOT)
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"serving subprocess ({case['name']}) failed:\n"
+                f"{res.stderr[-3000:]}")
+        line = [l for l in res.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        row = json.loads(line[len("RESULT "):])
+        row["name"] = case["name"]
+        row["stages"] = case["stages"]
+        row["spec"] = spec
+        row["rps_speedup"] = (
+            row["engine"]["requests_per_sec"]
+            / max(row["static"]["requests_per_sec"], 1e-12))
+        row["occupancy_ratio"] = (
+            row["engine"]["slot_occupancy"]
+            / max(row["static"]["slot_occupancy"], 1e-12))
+        rows.append(row)
+    return rows
+
+
+def _decode_fusion(bench: BenchConfig, seed: int):
+    """Fused-scan generate vs the v0 per-token loop, warm jits both
+    sides. The loop body here mirrors ``batching.decode_python_loop``
+    (whose token-level equivalence to ``generate_static`` is pinned by
+    tests) but holds its jitted prefill/decode warm across the timed
+    call, so the measured gap is dispatch structure, not compile."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serving import ServeConfig
+    from repro.serving.batching import _row_sample, make_generate_fn
+    from repro.serving.runners import SingleDeviceRunner
+    from repro.models import init_params
+
+    b, p, g = (4, 16, 8) if bench.smoke else (8, 32, 32)
+    cfg = ServeConfig()
+    mc = cfg.model_config()
+    params = init_params(jax.random.PRNGKey(seed), mc)
+    runner = SingleDeviceRunner(mc)
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(rng.integers(0, mc.vocab_size, (b, p)), jnp.int32)
+    plens = jnp.full((b,), p, jnp.int32)
+    gens = jnp.full((b,), g, jnp.int32)
+    req_ids = jnp.arange(b, dtype=jnp.int32)
+    base_key = jax.random.PRNGKey(seed)
+
+    gen = jax.jit(make_generate_fn(runner, max_new=g, temperature=0.0))
+    buf, _ = gen(params, runner.init_caches(b, p + g), prompts, plens, gens,
+                 req_ids, base_key)
+    jax.block_until_ready(buf)
+    t0 = time.perf_counter()
+    fused_buf, _ = gen(params, runner.init_caches(b, p + g), prompts, plens,
+                       gens, req_ids, base_key)
+    jax.block_until_ready(fused_buf)
+    fused_s = time.perf_counter() - t0
+
+    prefill = jax.jit(runner.prefill)
+    decode = jax.jit(runner.decode)
+    sample = jax.jit(lambda lg, n: _row_sample(
+        lg.astype(jnp.float32), base_key, req_ids, n, 0.0))
+
+    def loop():
+        caches = runner.init_caches(b, p + g)
+        logits_all, caches = prefill(params, caches, prompts)
+        last = jnp.take_along_axis(
+            logits_all, (plens - 1)[:, None, None], axis=1)[:, 0]
+        tok = sample(last, jnp.zeros((b,), jnp.int32))
+        buf = [tok]
+        pos = plens
+        for i in range(1, g):
+            logits, caches = decode(params, tok[:, None], caches, pos)
+            tok = sample(logits, jnp.full((b,), i, jnp.int32))
+            buf.append(tok)
+            pos = pos + 1
+            jax.block_until_ready(tok)  # the v0 per-token host sync
+        return jnp.stack(buf, axis=1)
+
+    loop_buf = loop()  # warm prefill/decode/sample
+    t0 = time.perf_counter()
+    loop_buf = loop()
+    loop_s = time.perf_counter() - t0
+
+    total = b * g
+    return {
+        "batch": b, "prompt_len": p, "gen": g,
+        "loop_s": loop_s, "fused_s": fused_s,
+        "loop_tok_s": total / loop_s, "fused_tok_s": total / fused_s,
+        "speedup": loop_s / fused_s,
+        "tokens_match": bool(jnp.array_equal(loop_buf, fused_buf)),
+    }
+
+
+def main(bench: BenchConfig = BenchConfig(), seed: int = 0,
+         force: bool = False):
+    cases = _serving_cases(bench, seed)
+    fusion = _decode_fusion(bench, seed)
+
+    for row in cases:
+        emit_csv_row(
+            f"serving/{row['name']}",
+            1e6 * row["engine"]["wall_seconds"],
+            f"engine_rps={row['engine']['requests_per_sec']:.2f} "
+            f"static_rps={row['static']['requests_per_sec']:.2f} "
+            f"speedup={row['rps_speedup']:.2f}x "
+            f"occupancy={row['engine']['slot_occupancy']:.2f}"
+            f"(vs {row['static']['slot_occupancy']:.2f}) "
+            f"ticks={row['engine']['ticks']} "
+            f"traces={row['engine_traces']} match={row['tokens_match']}")
+    emit_csv_row(
+        "serving/decode_fusion", 1e6 * fusion["fused_s"],
+        f"fused_tok_s={fusion['fused_tok_s']:.0f} "
+        f"loop_tok_s={fusion['loop_tok_s']:.0f} "
+        f"speedup={fusion['speedup']:.1f}x match={fusion['tokens_match']}")
+
+    payload = {"serving": {"cases": cases}, "decode_fusion": fusion}
+    save_json("serving", payload)
+    if not bench.smoke:
+        record_baseline(payload, force=force, path=SERVING_BASELINE)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true",
+                    help="re-record existing BENCH_serving.json keys")
+    ap.add_argument("--smoke", action="store_true", help="tiny CI sizes")
+    a = ap.parse_args()
+    main(BenchConfig(smoke=a.smoke), force=a.force)

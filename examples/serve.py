@@ -1,11 +1,13 @@
-"""Batched serving example: prefill + decode with KV caches.
+"""Batched serving example: ONE fused generate dispatch.
 
-    PYTHONPATH=src python examples/serve.py --arch qwen3-moe-30b-a3b \
+    PYTHONPATH=src python examples/serve.py --arch qwen2_5_3b \
         --batch 4 --prompt-len 64 --gen 32
 
-Runs the reduced variant of the chosen architecture on CPU: prefill the
-prompt batch, then greedy-decode new tokens one at a time through the
-cached serve path (ring-buffer cache if the arch has a sliding window).
+Thin wrapper over :func:`repro.serving.batching.generate_static` - the
+shared static-generate core (padded batched prefill + a single jitted
+``lax.scan`` over the decode steps, so the whole generation is one
+device dispatch instead of the v0 per-token host loop). The continuous
+service with request arrivals lives in ``repro.launch.serve``.
 """
 import argparse
 import time
@@ -14,54 +16,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import (
-    init_caches,
-    init_params,
-    make_decode_step,
-    make_prefill_step,
-)
+from repro.models import init_params
+from repro.serving import SingleDeviceRunner, generate_static
+from repro.serving.config import ServeConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--arch", default="qwen2_5_3b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    cache_len = args.prompt_len + args.gen
-    caches = init_caches(cfg, args.batch, cache_len)
-
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
+    cfg = ServeConfig(arch=args.arch.replace("-", "_").replace(".", "_"))
+    model_cfg = cfg.model_config()
+    params = init_params(jax.random.PRNGKey(0), model_cfg)
+    runner = SingleDeviceRunner(model_cfg)
 
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
-    )
-    t0 = time.time()
-    logits, caches = prefill(params, prompts, caches)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms")
+    prompts = rng.integers(
+        0, model_cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+    plens = np.full((args.batch,), args.prompt_len, np.int32)
+    gens = np.full((args.batch,), args.gen, np.int32)
 
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    outs = [tok]
     t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        logits, caches = decode(params, tok, caches, pos)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        outs.append(tok)
-    jax.block_until_ready(outs[-1])
-    t_dec = time.time() - t0
-    gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
-    print(f"decode: {args.gen-1} steps x batch {args.batch} in {t_dec*1e3:.1f} ms "
-          f"({(args.gen-1)*args.batch/max(t_dec,1e-9):.0f} tok/s on CPU)")
+    toks, n_gen = generate_static(
+        runner, params, prompts, plens, gens, max_new=args.gen,
+        temperature=args.temperature)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    total = int(np.asarray(n_gen).sum())
+    print(f"generate: {args.batch}x{args.prompt_len}+{args.gen} in "
+          f"{dt*1e3:.1f} ms ({total/max(dt,1e-9):.0f} tok/s incl. compile, "
+          "one dispatch)")
+    gen = np.asarray(toks)
     print("sample generations (token ids):")
     for b in range(min(args.batch, 2)):
         print(f"  [{b}] {gen[b][:16].tolist()} ...")

@@ -621,3 +621,162 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
         return loss, grads
 
     return fn
+
+
+# ---------------------------------------------------------------------------
+# serving: decode-mode stage pass (per-stage KV rings)
+# ---------------------------------------------------------------------------
+
+
+def stage_kv_caches(cfg: ModelConfig, boundaries: Sequence[int],
+                    num_slots: int, cache_len: int, dtype=jnp.float32):
+    """Per-stage KV rings for pipelined serving.
+
+    Returns ``{"k", "v"}`` of shape ``(S, max_len, B, kv_len, KH, hd)`` -
+    stage ``k``'s ring holds ONLY its own layers' KV entries (row ``i`` of
+    stage ``k`` is global layer ``boundaries[k-1] + i``; padding rows
+    belong to the zero-identity padding blocks and stay zero). Shard with
+    ``P(stage_axis)`` on the leading dim - the cache never leaves its
+    stage, exactly like the paper's sub-model state never leaves its
+    device.
+    """
+    sig = M.signature(cfg)
+    if any(kind != "A" for kind, _, _ in sig):
+        raise ValueError("stage_kv_caches: attention-only archs")
+    lens = stage_lengths(boundaries)
+    s, max_len = len(lens), max(lens)
+    kv_len = (min(cache_len, cfg.attention_window)
+              if cfg.attention_window is not None else cache_len)
+    shape = (s, max_len, num_slots, kv_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def pipeline_serve_fns(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
+                       stage_axis: str = "stage",
+                       pipe: PipelineConfig = PipelineConfig(
+                           compute_dtype="float32")):
+    """Build the decode-mode stage passes for the serving engine.
+
+    Returns ``(prefill, decode)`` with the engine's runner signatures:
+
+    * ``prefill(params, caches, prompts)``: ``prompts`` (B, P) ->
+      ``(logits (B, P, V), caches)`` - a fresh-sequence pass (scalar
+      cache index 0) through all stages; the caller gathers the row it
+      wants (per-slot prompt length) and WHERE-merges caches for the
+      slots it actually admitted.
+    * ``decode(params, tok, caches, pos)``: ``tok`` (B, 1), ``pos`` (B,)
+      per-slot entry counts -> ``(logits (B, V), caches)`` - one token
+      through the token ring.
+
+    Both run the serial token ring: S ticks, tick ``t`` computes on stage
+    ``t`` (``lax.cond`` on the stage index - padding blocks and foreign
+    ticks skip their FLOPs) while the activation hop (``ppermute``, the
+    Eq. 1 transmission) fires unconditionally every tick, cast to
+    ``pipe.wire_dtype`` on the wire. Decode is SERIAL by construction:
+    the sampled token feeds back into stage 0, so consecutive tokens
+    cannot pipeline - the multi-hop latency the paper's Eq. 5-7 charges
+    per inference. Logits replicate off the last stage via a masked
+    ``psum`` (exact: the other stages contribute exact zeros).
+
+    The hops stay OUTSIDE every ``cond`` so each stage executes the same
+    collective sequence regardless of which slot is live - that is what
+    keeps the engine step one compiled trace across arrivals/completions.
+    """
+    sig = M.signature(cfg)
+    period = M.find_period(sig)
+    assert period == 1, f"pipeline serving needs period-1 archs, got {period}"
+    slot_sig = sig[0]
+    if slot_sig[0] != "A" or slot_sig[1]:
+        raise ValueError("pipeline serving: attention-only, non-MoE archs")
+    s_stages = len(boundaries)
+    lens = stage_lengths(boundaries)
+    max_len = max(lens)
+    blk_impl = pipe.block_impl
+    wdtype = pipe.wire
+    perm_f = [(i, (i + 1) % s_stages) for i in range(s_stages)]
+
+    def _ring_pass(params, caches, x, positions, cache_index):
+        """Token-ring forward: x (B, s, d) embedded input (live on stage 0).
+
+        Returns (logits (B, s, V), caches). Runs under shard_map."""
+        stage_blocks = restack_for_stages(params["slots"][0], boundaries)
+        lens_arr = jnp.asarray(lens, jnp.int32)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+        def per_stage(stage_blocks, lens_arr, ck, cv, x, embed, final_norm,
+                      head):
+            stage_blocks = jax.tree.map(lambda a: a[0], stage_blocks)
+            ck, cv = ck[0], cv[0]  # (max_len, B, kv, KH, hd)
+            active_len = lens_arr[0]
+            sidx = jax.lax.axis_index(stage_axis)
+
+            def stage_apply(operand):
+                xx, ck, cv = operand
+
+                def body(carry, blk_cache_i):
+                    xc, = carry
+                    blk, k_i, v_i, i = blk_cache_i
+
+                    def apply(op):
+                        xi, ki, vi = op
+                        out, nc, _ = M.block_apply(
+                            blk, xi, cfg, slot_sig, positions=positions,
+                            cache={"k": ki, "v": vi},
+                            cache_index=cache_index, impl=blk_impl,
+                        )
+                        return out, nc["k"], nc["v"]
+
+                    xc, k_i, v_i = jax.lax.cond(
+                        i < active_len, apply, lambda op: op, (xc, k_i, v_i))
+                    return (xc,), (k_i, v_i)
+
+                (xx,), (nk, nv) = jax.lax.scan(
+                    body, (xx,), (blocks := stage_blocks, ck, cv,
+                                  jnp.arange(max_len)))
+                del blocks
+                return xx, nk, nv
+
+            for t in range(s_stages):
+                if t > 0:
+                    # the hop: Eq. 1 transmission, wire-dtype bytes
+                    x = jax.lax.ppermute(
+                        x.astype(wdtype), stage_axis, perm_f
+                    ).astype(pipe.dtype)
+                x, ck, cv = jax.lax.cond(
+                    sidx == t, stage_apply, lambda op: op, (x, ck, cv))
+
+            xh = L.rms_norm(x, final_norm, cfg.norm_eps)
+            logits = jnp.einsum("bsd,dv->bsv", xh, head.astype(x.dtype))
+            is_last = (sidx == s_stages - 1)
+            logits = jax.lax.psum(
+                jnp.where(is_last, logits.astype(jnp.float32), 0.0),
+                stage_axis)
+            return logits, ck[None], cv[None]
+
+        logits, ck, cv = shard_map(
+            per_stage,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: P(stage_axis), stage_blocks),
+                P(stage_axis), P(stage_axis), P(stage_axis),
+                P(), P(), P(), P(),
+            ),
+            out_specs=(P(), P(stage_axis), P(stage_axis)),
+            check_rep=False,
+        )(stage_blocks, lens_arr, caches["k"], caches["v"], x,
+          params["embed"], params["final_norm"], head)
+        return logits, {"k": ck, "v": cv}
+
+    def prefill(params, caches, prompts):
+        x = params["embed"].astype(pipe.dtype)[prompts]
+        positions = jnp.arange(prompts.shape[1])
+        return _ring_pass(params, caches, x, positions,
+                          jnp.zeros((), jnp.int32))
+
+    def decode(params, tok, caches, pos):
+        x = params["embed"].astype(pipe.dtype)[tok]
+        positions = pos[:, None]  # (B, 1) per-row
+        logits, caches = _ring_pass(params, caches, x, positions, pos)
+        return logits[:, -1], caches
+
+    return prefill, decode

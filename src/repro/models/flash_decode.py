@@ -26,7 +26,7 @@ def flash_decode(
     q: jax.Array,  # (B, 1, H, hd) - replicated over the model axis
     ck: jax.Array,  # (B, L, KH, hd) - L sharded over the model axis
     cv: jax.Array,
-    cache_index: jax.Array,  # scalar: current absolute position
+    cache_index: jax.Array,  # scalar current position, or (B,) per-row
     *,
     window: Optional[int] = None,
 ) -> jax.Array:
@@ -37,24 +37,33 @@ def flash_decode(
     kh = ck.shape[2]
     g = h // kh
     scale = 1.0 / math.sqrt(hd)
+    vec_idx = jnp.ndim(cache_index) == 1
 
     def local(qc, kc, vc, idx):
         # qc (b_loc, 1, H, hd); kc/vc (b_loc, L_loc, KH, hd)
         l_loc = kc.shape[1]
         shard = jax.lax.axis_index(model_ax)
         kpos = shard * l_loc + jnp.arange(l_loc)
-        ok = kpos <= idx
-        if window is not None:
-            ok &= kpos > idx - window
+        if vec_idx:
+            # per-row cache index: (b_loc, L_loc) validity mask
+            ok = kpos[None, :] <= idx[:, None]
+            if window is not None:
+                ok &= kpos[None, :] > idx[:, None] - window
+            okb = ok[:, None, :]
+        else:
+            ok = kpos <= idx
+            if window is not None:
+                ok &= kpos > idx - window
+            okb = ok[None, None, :]
         kr = jnp.repeat(kc, g, axis=2).astype(jnp.float32)
         vr = jnp.repeat(vc, g, axis=2).astype(jnp.float32)
         s = jnp.einsum("bhd,bkhd->bhk", qc[:, 0].astype(jnp.float32), kr) * scale
         # (b, H, L_loc)
-        s = jnp.where(ok[None, None, :], s, NEG)
+        s = jnp.where(okb, s, NEG)
         m_loc = s.max(axis=-1)  # (b, H)
         m = jax.lax.pmax(m_loc, model_ax)
         p = jnp.exp(s - m[..., None])
-        p = jnp.where(ok[None, None, :], p, 0.0)
+        p = jnp.where(okb, p, 0.0)
         l_sum = jax.lax.psum(p.sum(axis=-1), model_ax)  # (b, H)
         out = jax.lax.psum(jnp.einsum("bhk,bkhd->bhd", p, vr), model_ax)
         out = out / jnp.maximum(l_sum[..., None], 1e-30)
@@ -62,10 +71,11 @@ def flash_decode(
 
     qspec = P(batch_ax, None, None, None)
     cspec = P(batch_ax, model_ax, None, None)
+    ispec = P(batch_ax) if vec_idx else P()
     return shard_map(
         local,
         mesh=mesh,
-        in_specs=(qspec, cspec, cspec, P()),
+        in_specs=(qspec, cspec, cspec, ispec),
         out_specs=qspec,
         check_rep=False,
     )(q, ck, cv, cache_index)

@@ -217,6 +217,19 @@ def chunked_attention(
     return out[:, :sq].astype(q.dtype)
 
 
+def _row_cache_update(cache: Array, fresh: Array, index: Array) -> Array:
+    """Slot-indexed KV write: row ``b`` of ``cache`` takes ``fresh[b]`` at
+    its OWN position ``index[b]`` (vmapped ``dynamic_update_slice``).
+
+    This is what lets one compiled decode step serve a continuous batch of
+    slots sitting at different sequence positions (the serving engine's
+    per-slot KV rings); the scalar-``cache_index`` path is untouched.
+    """
+    return jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+    )(cache, fresh, index)
+
+
 def attention_apply(
     params,
     x: Array,
@@ -229,9 +242,13 @@ def attention_apply(
 ):
     """Self-attention with GQA + RoPE.
 
-    positions: (S,) absolute positions of the inputs.
+    positions: (S,) absolute positions of the inputs, or (B, S) per-row
+    positions when ``cache_index`` is a vector.
     kv_cache: optional dict {k:(B,C,KH,hd), v:(B,C,KH,hd)} - decode mode.
-    cache_index: scalar number of valid entries already in the cache.
+    cache_index: scalar number of valid entries already in the cache, or a
+    (B,) vector of PER-ROW entry counts (slot-indexed decode: every batch
+    row writes its fresh K/V at its own position and masks its own
+    history; see :func:`_row_cache_update`).
     Returns (out, new_cache).
     """
     b, s, d = x.shape
@@ -262,38 +279,50 @@ def attention_apply(
     k = apply_rope(k, cos, sin)
 
     new_cache = None
+    vec_idx = cache_index is not None and jnp.ndim(cache_index) == 1
     if kv_cache is not None:
         cache_len = kv_cache["k"].shape[1]
+        cd = kv_cache["k"].dtype
         if cfg.attention_window is not None and cache_len == cfg.attention_window and s == 1:
             # ring-buffer cache for sliding-window decode (1 token)
-            t = cache_index  # absolute position of the new token
+            t = cache_index  # absolute position(s) of the new token
             slot = t % cache_len
-            cd = kv_cache["k"].dtype
-            ck = jax.lax.dynamic_update_slice(kv_cache["k"], k.astype(cd), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(kv_cache["v"], v.astype(cd), (0, slot, 0, 0))
             # entry i now holds absolute position t - ((t - i) mod L), which is
             # always within the window; it is valid iff it is >= 0.
             idx = jnp.arange(cache_len)
-            abs_pos = t - jnp.mod(t - idx, cache_len)
-            kpos_bias = jnp.where(abs_pos >= 0, 0.0, -jnp.inf)
+            if vec_idx:
+                ck = _row_cache_update(kv_cache["k"], k.astype(cd), slot)
+                cv = _row_cache_update(kv_cache["v"], v.astype(cd), slot)
+                abs_pos = t[:, None] - jnp.mod(t[:, None] - idx[None, :], cache_len)
+                kpos_bias = jnp.where(abs_pos >= 0, 0.0, -jnp.inf)[:, None, None, :]
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    kv_cache["k"], k.astype(cd), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    kv_cache["v"], v.astype(cd), (0, slot, 0, 0))
+                abs_pos = t - jnp.mod(t - idx, cache_len)
+                kpos_bias = jnp.where(abs_pos >= 0, 0.0, -jnp.inf)[None, None, None, :]
             scores = jnp.einsum(
                 "bqhd,bkhd->bhqk",
                 q,
                 _repeat_kv(ck, h // kh),
                 preferred_element_type=jnp.float32,
             ) / math.sqrt(hd)
-            scores = scores + kpos_bias[None, None, None, :]
+            scores = scores + kpos_bias
             w = jax.nn.softmax(scores, axis=-1)
             out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), _repeat_kv(cv, h // kh))
             new_cache = {"k": ck, "v": cv}
         else:
-            cd = kv_cache["k"].dtype
-            ck = jax.lax.dynamic_update_slice(
-                kv_cache["k"], k.astype(cd), (0, cache_index, 0, 0)
-            )
-            cv = jax.lax.dynamic_update_slice(
-                kv_cache["v"], v.astype(cd), (0, cache_index, 0, 0)
-            )
+            if vec_idx:
+                ck = _row_cache_update(kv_cache["k"], k.astype(cd), cache_index)
+                cv = _row_cache_update(kv_cache["v"], v.astype(cd), cache_index)
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    kv_cache["k"], k.astype(cd), (0, cache_index, 0, 0)
+                )
+                cv = jax.lax.dynamic_update_slice(
+                    kv_cache["v"], v.astype(cd), (0, cache_index, 0, 0)
+                )
             from repro.distribution.context import active as ctx_active
 
             if (
@@ -309,11 +338,14 @@ def attention_apply(
                                    window=cfg.attention_window)
             else:
                 kpos = jnp.arange(cache_len)
-                qpos = positions  # (s,)
-                ok = kpos[None, :] <= qpos[:, None]
-                ok &= kpos[None, :] < (cache_index + s)
+                qpos = positions  # (s,) absolute, or (B, s) per-row
+                ok = kpos <= qpos[..., None]
+                if vec_idx:
+                    ok &= kpos < (cache_index[:, None, None] + s)
+                else:
+                    ok &= kpos[None, :] < (cache_index + s)
                 if cfg.attention_window is not None:
-                    ok &= kpos[None, :] > (qpos[:, None] - cfg.attention_window)
+                    ok &= kpos > (qpos[..., None] - cfg.attention_window)
                 bias = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
                 scores = jnp.einsum(
                     "bqhd,bkhd->bhqk",
@@ -321,7 +353,7 @@ def attention_apply(
                     _repeat_kv(ck, h // kh),
                     preferred_element_type=jnp.float32,
                 ) / math.sqrt(hd)
-                scores = scores + bias[None, None]
+                scores = scores + (bias[:, None] if vec_idx else bias[None, None])
                 w = jax.nn.softmax(scores, axis=-1)
                 out = jnp.einsum(
                     "bhqk,bkhd->bqhd", w.astype(v.dtype), _repeat_kv(cv, h // kh)

@@ -233,6 +233,9 @@ def forward(
     s = x.shape[1]
     if cache_index is None:
         positions = jnp.arange(s)
+    elif jnp.ndim(cache_index) == 1:
+        # slot-indexed serving: per-row entry counts -> per-row positions (B, s)
+        positions = cache_index[:, None] + jnp.arange(s)
     else:
         positions = cache_index + jnp.arange(s)
 
@@ -410,7 +413,8 @@ def make_prefill_step(cfg: ModelConfig, *, impl="auto", unroll=False,
 def make_decode_step(cfg: ModelConfig, *, impl="auto", unroll=False,
                      compute_dtype=jnp.bfloat16):
     def decode(params, tokens, caches, cache_index):
-        """tokens: (B, 1); cache_index: scalar int32 (tokens already seen)."""
+        """tokens: (B, 1); cache_index: int32 tokens already seen - a scalar
+        (lockstep batch) or a (B,) vector (per-slot counts, serving engine)."""
         logits, new_caches, _ = forward(
             params, tokens, cfg, caches=caches, cache_index=cache_index,
             impl=impl, remat=False, unroll=unroll, compute_dtype=compute_dtype,

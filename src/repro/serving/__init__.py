@@ -1,0 +1,39 @@
+"""Continuous-batching split-inference serving.
+
+The serving engine is the inference-side analogue of the fused train
+chunk: ONE compiled step that admits newly arrived requests into free
+microbatch slots, prefills them, and decodes a chunk of tokens for every
+active slot - no stop-the-world rebatching, no per-token host dispatch.
+Split plans (the paper's Eq. 10 output) run through the same engine via
+the pipeline runner's per-stage KV rings, and the online re-planner
+re-scores cut points as load shifts between ticks.
+
+Layout:
+
+* :mod:`repro.serving.engine` - jitted engine step + state.
+* :mod:`repro.serving.runners` - single-device / pipeline model backends.
+* :mod:`repro.serving.batching` - static batched generate (fused
+  ``lax.scan`` decode) shared by the examples, the launcher, the
+  benchmarks' static baseline, and the bit-identity reference.
+* :mod:`repro.serving.service` - host-side queue, slot scheduler,
+  wall-clock service loop, Poisson traces.
+* :mod:`repro.serving.replanner` - online split re-scoring.
+* :mod:`repro.serving.config` - engine/service knobs + JSON config.
+"""
+from repro.serving.batching import (decode_python_loop, generate_reference,
+                                    generate_static, sample_token)
+from repro.serving.config import ServeConfig
+from repro.serving.engine import (EngineState, init_engine_state,
+                                  make_engine_step)
+from repro.serving.replanner import OnlineReplanner
+from repro.serving.runners import PipelineRunner, SingleDeviceRunner
+from repro.serving.service import (Request, RequestQueue, ServingService,
+                                   SlotScheduler, poisson_trace)
+
+__all__ = [
+    "EngineState", "OnlineReplanner", "PipelineRunner", "Request",
+    "RequestQueue", "ServeConfig", "ServingService", "SingleDeviceRunner",
+    "SlotScheduler", "decode_python_loop", "generate_reference",
+    "generate_static", "init_engine_state", "make_engine_step",
+    "poisson_trace", "sample_token",
+]

@@ -1,0 +1,264 @@
+"""Host-side serving: request queue, slot scheduler, wall-clock loop.
+
+The host does only bookkeeping - every token-level decision lives inside
+the jitted engine step. Per tick the host (a) moves requests whose
+arrival time has passed into the FIFO queue, (b) packs at most
+``min(A, pending, free slots)`` of them into the fixed-shape arrival
+buffers, (c) calls the engine step, and (d) drains completions from the
+small report readback (pulling ``gen_buf`` rows only for slots that
+finished). Idle ticks (nothing pending, nothing active) skip the step
+call entirely.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.config import ServeConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (plen,) int32
+    gen_target: int
+    arrival_time: float = 0.0     # seconds from trace start
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray
+    arrival_time: float
+    admit_time: float
+    done_time: float
+
+    @property
+    def latency(self) -> float:
+        return self.done_time - self.arrival_time
+
+
+class RequestQueue:
+    """FIFO of arrived-but-unadmitted requests."""
+
+    def __init__(self, trace: List[Request]):
+        self._future = sorted(trace, key=lambda r: r.arrival_time)
+        self._ready: deque = deque()
+
+    def advance(self, now: float) -> None:
+        while self._future and self._future[0].arrival_time <= now:
+            self._ready.append(self._future.pop(0))
+
+    def pop(self, k: int) -> List[Request]:
+        return [self._ready.popleft() for _ in range(min(k, len(self._ready)))]
+
+    @property
+    def pending(self) -> int:
+        return len(self._ready)
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._future and not self._ready
+
+    def next_arrival(self) -> Optional[float]:
+        return self._future[0].arrival_time if self._future else None
+
+
+class SlotScheduler:
+    """Packs ready requests into the engine's fixed-shape arrival buffers."""
+
+    def __init__(self, arrival_slots: int, prompt_pad: int):
+        self.a = arrival_slots
+        self.p = prompt_pad
+
+    def pack(self, queue: RequestQueue, free_slots: int):
+        """-> (admitted requests, prompt (A,P), plen, gen, rid, n_arr)."""
+        reqs = queue.pop(min(self.a, free_slots))
+        ap = np.zeros((self.a, self.p), np.int32)
+        al = np.ones((self.a,), np.int32)
+        ag = np.ones((self.a,), np.int32)
+        ar = np.full((self.a,), -1, np.int32)
+        for i, r in enumerate(reqs):
+            if r.plen > self.p:
+                raise ValueError(
+                    f"request {r.rid} prompt length {r.plen} exceeds "
+                    f"prompt_pad {self.p}")
+            ap[i, :r.plen] = r.prompt
+            al[i] = r.plen
+            ag[i] = r.gen_target
+            ar[i] = r.rid
+        return reqs, ap, al, ag, ar, len(reqs)
+
+
+class ServingService:
+    """The continuous-batching service loop over one engine."""
+
+    def __init__(self, cfg: ServeConfig, params=None, mesh=None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import model as M
+        from repro.serving.engine import (init_engine_state,
+                                          make_engine_step)
+        from repro.serving.runners import PipelineRunner, SingleDeviceRunner
+
+        self.cfg = cfg
+        self.model_cfg = cfg.model_config()
+        dtype = jnp.dtype(cfg.compute_dtype)
+        if cfg.boundaries is None:
+            self.runner = SingleDeviceRunner(self.model_cfg,
+                                             compute_dtype=dtype)
+        else:
+            from repro.core.pipeline import PipelineConfig
+            from repro.launch.mesh import make_stage_mesh
+
+            if mesh is None:
+                mesh = make_stage_mesh(len(cfg.boundaries))
+            pipe = PipelineConfig(compute_dtype=cfg.compute_dtype,
+                                  wire_dtype=cfg.wire_dtype)
+            self.runner = PipelineRunner(self.model_cfg, mesh,
+                                         cfg.boundaries, pipe=pipe)
+        if params is None:
+            params = M.init_params(jax.random.PRNGKey(cfg.seed),
+                                   self.model_cfg)
+        self.params = params
+        self.base_key = jax.random.PRNGKey(cfg.seed)
+        self.step = make_engine_step(
+            self.runner, num_slots=cfg.num_slots,
+            arrival_slots=cfg.arrival_slots, prompt_pad=cfg.prompt_pad,
+            max_new=cfg.max_new, decode_chunk=cfg.decode_chunk,
+            temperature=cfg.temperature, base_key=self.base_key,
+            # safe for BOTH runners: the cond predicate (take.any()) is
+            # computed from replicated state, so every stage shard takes
+            # the same branch and the prefill pass's collectives
+            # rendezvous uniformly (pinned bitwise by the pipeline
+            # serving test)
+            skip_idle_prefill=True)
+        self._jstep = jax.jit(self.step, donate_argnums=(1,))
+        self.state = init_engine_state(
+            self.runner, cfg.num_slots, cfg.prompt_pad, cfg.max_new)
+        self.replanner = None  # attach via attach_replanner()
+
+    def attach_replanner(self, replanner) -> None:
+        self.replanner = replanner
+
+    def run(self, trace: List[Request], *, realtime: bool = False,
+            max_ticks: int = 100_000) -> Dict:
+        """Serve ``trace`` to completion; returns results + metrics.
+
+        ``realtime=False`` (benchmark mode) treats arrival times as a
+        virtual clock that only moves forward when the engine would
+        otherwise idle - arrivals still gate admission ORDER, but the
+        engine never sleeps, so throughput comparisons are
+        compute-bound. ``realtime=True`` sleeps until the next arrival.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        queue = RequestQueue(list(trace))
+        sched = SlotScheduler(self.cfg.arrival_slots, self.cfg.prompt_pad)
+        admit_t: Dict[int, float] = {}
+        arrive_t = {r.rid: r.arrival_time for r in trace}
+        completions: List[Completion] = []
+        seen_done = set()
+        t0 = time.perf_counter()
+        free = self.cfg.num_slots
+        active_rids: set = set()
+        replans = []
+        tick = 0
+        while tick < max_ticks:
+            now = time.perf_counter() - t0
+            queue.advance(now)
+            if queue.pending == 0 and not active_rids:
+                if queue.exhausted:
+                    break
+                # idle: jump the virtual clock to the next arrival
+                nxt = queue.next_arrival()
+                if realtime:
+                    time.sleep(max(nxt - now, 0.0))
+                else:
+                    t0 -= max(nxt - now, 0.0)
+                queue.advance(time.perf_counter() - t0)
+            reqs, ap, al, ag, ar, n_arr = sched.pack(queue, free)
+            now = time.perf_counter() - t0
+            for r in reqs:
+                admit_t[r.rid] = now
+            self.state, report = self._jstep(
+                self.params, self.state, jnp.asarray(ap), jnp.asarray(al),
+                jnp.asarray(ag), jnp.asarray(ar), jnp.int32(n_arr))
+            act = np.asarray(report["active"])
+            rids = np.asarray(report["req_id"])
+            ngen = np.asarray(report["n_gen"])
+            now = time.perf_counter() - t0
+            active_rids = {int(r) for r, a in zip(rids, act) if a and r >= 0}
+            done_slots = [s for s in range(len(rids))
+                          if rids[s] >= 0 and not act[s]
+                          and int(rids[s]) not in seen_done]
+            if done_slots:
+                buf = np.asarray(self.state.gen_buf)  # pull only on completions
+                for s in done_slots:
+                    rid = int(rids[s])
+                    seen_done.add(rid)
+                    completions.append(Completion(
+                        rid=rid, tokens=buf[s, :ngen[s]].copy(),
+                        arrival_time=arrive_t[rid],
+                        admit_time=admit_t[rid], done_time=now))
+            free = int((~act).sum())
+            if (self.replanner is not None and self.cfg.replan_every
+                    and tick % self.cfg.replan_every == 0):
+                occupancy = float(act.sum()) / max(len(act), 1)
+                replans.append(self.replanner.replan(load=occupancy))
+            tick += 1
+        wall = time.perf_counter() - t0
+        return self._metrics(completions, wall, tick, replans)
+
+    def _metrics(self, completions: List[Completion], wall: float,
+                 ticks: int, replans) -> Dict:
+        lats = sorted(c.latency for c in completions)
+        total_tokens = int(sum(len(c.tokens) for c in completions))
+        busy = float(self.state.busy_steps)
+        steps = float(self.state.decode_steps)
+        pct = (lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]
+               if lats else float("nan"))
+        return {
+            "completions": {c.rid: c.tokens for c in completions},
+            "latencies": {c.rid: c.latency for c in completions},
+            "num_requests": len(completions),
+            "wall_seconds": wall,
+            "ticks": ticks,
+            "requests_per_sec": len(completions) / wall if wall else 0.0,
+            "tokens_per_sec": total_tokens / wall if wall else 0.0,
+            "p50_latency_s": pct(0.50),
+            "p99_latency_s": pct(0.99),
+            # structural accounting (wall-clock independent, as in
+            # core.transport): fraction of slot-steps doing useful decode
+            "slot_occupancy": busy / (steps * self.cfg.num_slots)
+            if steps else 0.0,
+            "replans": replans,
+        }
+
+
+def poisson_trace(*, n_requests: int, rate_per_sec: float, vocab_size: int,
+                  plen_range=(4, 32), gen_range=(4, 24), seed: int = 0
+                  ) -> List[Request]:
+    """Mixed-length Poisson arrival trace (exponential inter-arrivals)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_per_sec))
+        pl = int(rng.integers(plen_range[0], plen_range[1] + 1))
+        gt = int(rng.integers(gen_range[0], gen_range[1] + 1))
+        out.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab_size, size=pl).astype(np.int32),
+            gen_target=gt, arrival_time=t))
+    return out

@@ -1,0 +1,303 @@
+"""Serving engine: bit-identity, slot reuse, trace audits, re-planning.
+
+The contract under test (measured on the CPU backend, leaned on by the
+engine design):
+
+* per-ROW float results at a FIXED batch shape are bitwise invariant to
+  the other rows' contents and to which row a request occupies;
+* therefore the single-request reference (``generate_reference``: the
+  request alone in a batch padded to the engine's slot count) must match
+  the engine's output for that request BITWISE, no matter when it
+  arrived, which slot it landed in, or what stale garbage the slot's KV
+  ring held;
+* the engine step stays ONE compiled trace across arrivals, completions,
+  idle ticks, and re-plans (all shapes static).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.model import init_params
+from repro.serving import (
+    ServeConfig, ServingService, SlotScheduler, RequestQueue, Request,
+    SingleDeviceRunner, generate_reference, generate_static,
+    decode_python_loop, poisson_trace,
+)
+from repro.serving.engine import init_engine_state, make_engine_step
+from repro.serving.runners import check_servable
+
+
+def _model(num_layers=2):
+    cfg = ServeConfig(num_layers=num_layers).model_config()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _trace(cfg, n=6, seed=3, rate=50.0, plen=(2, 8), gen=(2, 8)):
+    return poisson_trace(n_requests=n, rate_per_sec=rate,
+                         vocab_size=cfg.vocab_size, plen_range=plen,
+                         gen_range=gen, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# vector cache_index: the per-slot decode primitive
+
+
+def test_vector_cache_index_bitwise_matches_scalar():
+    """Decoding B rows at a COMMON position through the vector-(B,)
+    cache_index path must be bitwise the scalar-index path (the vector
+    path only generalizes the mask/position arithmetic)."""
+    cfg, params = _model()
+    runner = SingleDeviceRunner(cfg)
+    b, p = 3, 6
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32)
+    caches = runner.init_caches(b, p + 4)
+    _, caches = runner.prefill(params, caches, prompts)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+
+    lg_s, c_s, _ = M.forward(params, tok, cfg, caches=caches,
+                             cache_index=jnp.asarray(p, jnp.int32),
+                             compute_dtype=jnp.float32)
+    lg_v, c_v, _ = M.forward(params, tok, cfg, caches=caches,
+                             cache_index=jnp.full((b,), p, jnp.int32),
+                             compute_dtype=jnp.float32)
+    assert jnp.array_equal(lg_s, lg_v)
+    for a, bb in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        assert jnp.array_equal(a, bb)
+
+
+def test_check_servable_rejects_ssm_and_moe():
+    from repro.configs import get_config
+
+    with pytest.raises(ValueError):
+        check_servable(get_config("jamba-v0.1-52b").reduced())
+
+
+# ---------------------------------------------------------------------------
+# fused decode scan vs the v0 per-token loop
+
+
+def test_fused_generate_matches_python_loop():
+    cfg, params = _model()
+    runner = SingleDeviceRunner(cfg)
+    rng = np.random.default_rng(1)
+    b, p, g = 4, 6, 8
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32)
+    plens = jnp.asarray([6, 3, 5, 2], jnp.int32)
+    prompts = prompts * (jnp.arange(p)[None, :] < plens[:, None])
+    gens = jnp.asarray([8, 2, 5, 1], jnp.int32)
+
+    fused, n_f = generate_static(runner, params, prompts, plens, gens,
+                                 max_new=g)
+    loop, n_l = decode_python_loop(runner, params, prompts, plens, gens,
+                                   max_new=g)
+    assert jnp.array_equal(n_f, n_l)
+    assert jnp.array_equal(fused, loop)
+
+
+# ---------------------------------------------------------------------------
+# engine vs single-request reference, bitwise
+
+
+def _check_engine_vs_reference(temperature):
+    cfg = ServeConfig(num_slots=3, arrival_slots=2, prompt_pad=8, max_new=8,
+                      decode_chunk=2, temperature=temperature)
+    svc = ServingService(cfg)
+    # 7 requests through 3 slots: arrivals land mid-flight of earlier
+    # requests and every slot is reused at least once
+    trace = _trace(svc.model_cfg, n=7)
+    res = svc.run(trace)
+    assert res["num_requests"] == len(trace)
+    for r in trace:
+        ref = generate_reference(
+            svc.runner, svc.params, r.prompt, gen_target=r.gen_target,
+            max_new=cfg.max_new, prompt_pad=cfg.prompt_pad,
+            slots=cfg.num_slots, temperature=temperature,
+            base_key=svc.base_key, req_id=r.rid)
+        got = res["completions"][r.rid]
+        assert np.array_equal(got, np.asarray(ref)), (
+            f"request {r.rid}: engine {got} != reference {np.asarray(ref)}")
+    # the whole service ran on one compiled engine trace
+    assert len(svc.step.trace_count) == 1
+
+
+def test_engine_bitwise_matches_reference_greedy():
+    _check_engine_vs_reference(0.0)
+
+
+def test_engine_bitwise_matches_reference_sampled():
+    """Temperature sampling: per-(request, token) keys are slot- and
+    tick-independent, so the engine consumes the same stream as the
+    reference."""
+    _check_engine_vs_reference(0.7)
+
+
+def test_slot_reuse_survives_poisoned_stale_cache():
+    """Freed slots are NOT zeroed; correctness rests on stale FINITE
+    values being masked into exact-zero attention weights. Poison every
+    KV ring with large finite garbage between requests and the next
+    request must still match the reference bitwise."""
+    cfg, params = _model()
+    runner = SingleDeviceRunner(cfg)
+    n, p, g = 2, 6, 6
+    key = jax.random.PRNGKey(0)
+    step = make_engine_step(runner, num_slots=n, arrival_slots=1,
+                            prompt_pad=p, max_new=g, decode_chunk=3,
+                            base_key=key)
+    jstep = jax.jit(step)
+    state = init_engine_state(runner, n, p, g)
+    rng = np.random.default_rng(5)
+
+    def admit_and_drain(state, rid, prompt, gen):
+        ap = np.zeros((1, p), np.int32)
+        ap[0, :len(prompt)] = prompt
+        args = (jnp.asarray(ap), jnp.asarray([len(prompt)], jnp.int32),
+                jnp.asarray([gen], jnp.int32), jnp.asarray([rid], jnp.int32))
+        state, rep = jstep(params, state, *args, jnp.int32(1))
+        while bool(np.asarray(rep["active"]).any()):
+            state, rep = jstep(params, state, *(jnp.zeros_like(a) for a in args),
+                               jnp.int32(0))
+        slot = int(np.asarray(rep["req_id"]).tolist().index(rid))
+        ngen = int(np.asarray(rep["n_gen"])[slot])
+        return state, np.asarray(state.gen_buf)[slot, :ngen]
+
+    pr_a = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    state, _ = admit_and_drain(state, 0, pr_a, 4)
+
+    # poison EVERY slot's KV ring with large finite garbage
+    state = state._replace(caches=jax.tree.map(
+        lambda c: jnp.full_like(c, 1e4), state.caches))
+
+    pr_b = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    state, got = admit_and_drain(state, 1, pr_b, 5)
+    ref = generate_reference(runner, params, pr_b, gen_target=5, max_new=g,
+                             prompt_pad=p, slots=n, base_key=key, req_id=1)
+    assert np.array_equal(got, np.asarray(ref))
+    assert len(step.trace_count) == 1
+
+
+# ---------------------------------------------------------------------------
+# host-side scheduler / queue / trace units
+
+
+def test_scheduler_packs_bounded_by_free_slots():
+    q = RequestQueue([Request(rid=i, prompt=np.arange(3, dtype=np.int32),
+                              gen_target=2, arrival_time=0.0)
+                      for i in range(5)])
+    q.advance(1.0)
+    sched = SlotScheduler(arrival_slots=4, prompt_pad=8)
+    reqs, ap, al, ag, ar, n_arr = sched.pack(q, free_slots=2)
+    assert [r.rid for r in reqs] == [0, 1] and n_arr == 2
+    assert ap.shape == (4, 8) and list(ar) == [0, 1, -1, -1]
+    reqs, *_, n_arr = sched.pack(q, free_slots=99)  # capped by arrival_slots
+    assert [r.rid for r in reqs] == [2, 3, 4] and n_arr == 3
+    assert q.exhausted
+
+
+def test_scheduler_rejects_overlong_prompt():
+    q = RequestQueue([Request(rid=0, prompt=np.zeros(9, np.int32),
+                              gen_target=1)])
+    q.advance(0.0)
+    with pytest.raises(ValueError, match="exceeds prompt_pad"):
+        SlotScheduler(arrival_slots=1, prompt_pad=8).pack(q, 1)
+
+
+def test_poisson_trace_shapes_and_config_roundtrip(tmp_path):
+    tr = poisson_trace(n_requests=10, rate_per_sec=5.0, vocab_size=64,
+                       plen_range=(2, 6), gen_range=(1, 4), seed=0)
+    times = [r.arrival_time for r in tr]
+    assert times == sorted(times) and times[0] > 0
+    assert all(2 <= r.plen <= 6 and 1 <= r.gen_target <= 4 for r in tr)
+
+    path = tmp_path / "serve.json"
+    path.write_text('{"num_slots": 16, "boundaries": [1, 2]}')
+    cfg = ServeConfig.load(str(path), {"decode_chunk": 2})
+    assert (cfg.num_slots, cfg.decode_chunk, cfg.boundaries) == (16, 2, (1, 2))
+    with pytest.raises(KeyError):
+        ServeConfig.load(None, {"num_slotz": 4})
+
+
+# ---------------------------------------------------------------------------
+# online re-planner
+
+
+def test_replanner_matches_fresh_scoring_zero_recompile():
+    from repro.core.env import MHSLEnv
+    from repro.core.profiles import resnet101_profile
+    from repro.serving import OnlineReplanner
+
+    env = MHSLEnv(profile=resnet101_profile(batch=1))
+    rp = OnlineReplanner(env, bandwidth_sensitivity=0.5, energy_drain=0.0)
+    decisions = [rp.replan(load=l) for l in (0.0, 0.4, 0.9)]
+    # shifting load shifted the scenario, all through ONE compiled trace
+    assert rp.trace_count[0] == 1
+    assert all(d["num_plans"] == decisions[0]["num_plans"] for d in decisions)
+
+    # decision must equal a FRESH scoring pass under the same shifted
+    # scenario (independent oracle instance)
+    fresh = env.make_split_oracle()
+    for load, dec in zip((0.0, 0.4, 0.9), decisions):
+        out = fresh(rp.dev_pos, rp.devices, rp.p_tx, rp.decoy_power,
+                    rp.shifted_scenario(load))
+        delay = np.asarray(out["delay"])
+        feas = np.asarray(out["feasible"])
+        best = int(np.argmin(np.where(feas, delay, np.inf)))
+        assert dec["boundaries"] == tuple(
+            int(b) for b in np.asarray(out["boundaries"])[best])
+        assert dec["delay"] == pytest.approx(delay[best], rel=0, abs=0)
+
+    # heavier load can only tighten the delay-optimal plan's delay
+    assert decisions[2]["delay"] >= decisions[0]["delay"]
+
+
+def test_service_replan_cadence():
+    cfg = ServeConfig(num_slots=2, arrival_slots=2, prompt_pad=8, max_new=4,
+                      decode_chunk=4, replan_every=1)
+    svc = ServingService(cfg)
+    from repro.core.env import MHSLEnv
+    from repro.core.profiles import resnet101_profile
+    from repro.serving import OnlineReplanner
+
+    svc.attach_replanner(OnlineReplanner(
+        MHSLEnv(profile=resnet101_profile(batch=1))))
+    res = svc.run(_trace(svc.model_cfg, n=3, gen=(1, 4)))
+    assert res["num_requests"] == 3
+    assert len(res["replans"]) == res["ticks"]
+    assert all(len(r["boundaries"]) > 0 for r in res["replans"])
+    assert svc.replanner.trace_count[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# pipeline serving (clean subprocess: forced stage devices)
+
+
+def test_pipeline_engine_matches_single_device(subproc):
+    """The split engine (per-stage KV rings, activations on the wire)
+    serves bitwise the same tokens as the single-device engine at
+    f32 compute / f32 wire."""
+    out = subproc(
+        """
+import numpy as np
+from repro.serving import ServeConfig, ServingService, poisson_trace
+
+kw = dict(num_slots=3, arrival_slots=2, prompt_pad=8, max_new=8,
+          decode_chunk=2)
+single = ServingService(ServeConfig(**kw))
+piped = ServingService(ServeConfig(boundaries=(1, 2), **kw))
+trace = poisson_trace(n_requests=5, rate_per_sec=50.0,
+                      vocab_size=single.model_cfg.vocab_size,
+                      plen_range=(2, 8), gen_range=(2, 8), seed=3)
+a = single.run(list(trace))
+b = piped.run(list(trace))
+assert set(a["completions"]) == set(b["completions"])
+for rid in a["completions"]:
+    assert np.array_equal(a["completions"][rid], b["completions"][rid]), rid
+assert len(piped.step.trace_count) == 1
+print("PIPE_SERVE_OK", len(a["completions"]))
+""",
+        n_devices=2)
+    assert "PIPE_SERVE_OK 5" in out
