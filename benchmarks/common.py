@@ -106,6 +106,24 @@ class BenchConfig:
     # episodes and resumes from an existing checkpoint by default.
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
+    # which LeakageModel the leakage figures price hops with: "analytic"
+    # (the paper's closed-form Eq. 30 values, the default) or "empirical"
+    # (per-layer values measured by training the FSHA-style attacker
+    # population of repro.attack - see leakage_model()).
+    leakage: str = "analytic"
+
+    def leakage_model(self, seed: int = 0):
+        """None for the analytic default (MHSLEnv's built-in
+        AnalyticLeakage), or a trained EmpiricalLeakage - making the
+        learned attacker a one-flag swap for every fig benchmark."""
+        if self.leakage == "analytic":
+            return None
+        if self.leakage != "empirical":
+            raise ValueError(f"unknown leakage model {self.leakage!r}")
+        from repro.attack import train_empirical_model
+
+        return train_empirical_model(seed=seed,
+                                     steps=120 if self.smoke else 400)
 
     @property
     def episodes(self) -> int:

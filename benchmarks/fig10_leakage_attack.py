@@ -1,0 +1,144 @@
+"""Fig. 10 (repo extension): analytic vs attacker-measured leakage per cut.
+
+Trains the FSHA-style reconstruction adversary population of
+``repro.attack`` - ONE attacker per (cut point x monitoring scenario),
+all in ONE jitted dispatch - against the smashed activations of a
+reduced transformer, then prices every cut point of an 8-stage split
+plan with BOTH :class:`LeakageModel` implementations on the same
+:class:`HopGeometry`:
+
+* ``analytic``: the paper's closed-form Eq. 30 with the profile's
+  assumed depth-decaying ``leak_norm`` table;
+* ``empirical``: identical wireless physics, per-layer values replaced
+  by the trained attacker's measured reconstruction accuracy.
+
+Emits one CSV row per cut (analytic, empirical, raw attack accuracy at
+both capture levels) and a JSON with the training MSE quarters and the
+trace count - the CI smoke gate asserts the attacker actually learns
+(MSE decreasing monotonically-on-average) inside a single compiled
+trace. Outside smoke mode the vmapped-population training rate is
+recorded as the write-once ``attacker_population`` entry of
+``BENCH_throughput.json``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    BenchConfig, Timer, emit_csv_row, record_baseline, save_json,
+)
+from repro.attack import (
+    capture_weight, empirical_model_from, tiny_attack_model_cfg,
+    train_attacker_population,
+)
+from repro.core.channel import NetworkConfig
+from repro.core.leakage import AnalyticLeakage, evaluate_leakage, plan_hop_geometry
+from repro.core.profiles import transformer_profile
+from repro.core.scenario import scenario_from_net
+
+DEPTH = 8
+QS = (0.3, 0.8)  # monitoring probabilities -> attacker capture scenarios
+
+
+def _plan_and_scenario(net: NetworkConfig):
+    """One 8-stage plan (one layer per stage -> a hop at EVERY cut) over a
+    deterministic line-of-devices geometry with two eavesdroppers."""
+    n_dev = DEPTH
+    xs = jnp.linspace(60.0, 440.0, n_dev)
+    dev_pos = jnp.stack([xs, jnp.full((n_dev,), 250.0)], axis=1)
+    eav_pos = jnp.asarray([[150.0, 150.0], [350.0, 360.0]])[: net.num_eaves]
+    boundaries = jnp.arange(1, DEPTH + 1)
+    devices = jnp.arange(DEPTH)
+    decoy_p = jnp.zeros((n_dev,)).at[0].set(0.2).at[n_dev - 1].set(0.2)
+    plan = plan_hop_geometry(boundaries, devices, dev_pos, eav_pos,
+                             p_tx=0.5, decoy_p=decoy_p)
+    sc = scenario_from_net(net)
+    sc = sc._replace(eave_mask=jnp.ones((net.num_eaves,)))
+    return plan, sc
+
+
+def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
+    steps = 200 if bench.smoke else 600
+    cuts = np.arange(1, DEPTH)
+    model_cfg = tiny_attack_model_cfg(depth=DEPTH)
+    cw = [capture_weight(q) for q in QS]
+
+    res = train_attacker_population(model_cfg, cuts=cuts, capture_weights=cw,
+                                    steps=steps, seed=seed)
+    hi = int(np.argmax(cw))  # highest-capture scenario prices the hops
+
+    prof = transformer_profile(model_cfg, batch=1, seq=64)
+    analytic = AnalyticLeakage.for_profile(prof)
+    empirical = empirical_model_from(res, scenario_idx=hi)
+
+    net = NetworkConfig()
+    plan, sc = _plan_and_scenario(net)
+    rows = {}
+    for qi, q in enumerate(QS):
+        scq = sc._replace(monitor_prob=jnp.full((net.num_eaves,), q))
+        la = np.asarray(evaluate_leakage(analytic, scq, plan))
+        le = np.asarray(evaluate_leakage(empirical, scq, plan))
+        rows[q] = {"analytic": la.tolist(), "empirical": le.tolist()}
+        if qi == len(QS) - 1:
+            for k, cut in enumerate(cuts):
+                emit_csv_row(
+                    f"fig10/cut={cut}", 0.0,
+                    f"analytic={la[k]:.4f} empirical={le[k]:.4f} "
+                    + " ".join(f"score(q={QS[s]})={res.scores[k, s]:.3f}"
+                               for s in range(len(QS))),
+                )
+
+    # training-health trace for the CI gate: mean recon MSE of the
+    # high-capture attackers in step quarters, + the 1-trace audit
+    mse_hi = res.recon_mse[:, hi, :].mean(axis=0)
+    quarters = mse_hi.reshape(4, -1).mean(axis=1)
+    payload = {
+        "cuts": cuts.tolist(),
+        "qs": list(QS),
+        "capture_weights": res.capture_weights.tolist(),
+        "scores": res.scores.tolist(),
+        "final_mse": res.final_mse.tolist(),
+        "rows": rows,
+        "mse_quarters": quarters.tolist(),
+        "attacker_traces": res.trace_count[0],
+        "population": res.population,
+        "steps": steps,
+        "train_seconds": res.seconds,
+    }
+    save_json("fig10_leakage_attack", payload)
+    emit_csv_row(
+        "fig10/summary", res.seconds * 1e6 / max(res.population * steps, 1),
+        f"population={res.population} traces={res.trace_count[0]} "
+        f"mse_quarters={'/'.join(f'{m:.3f}' for m in quarters)}",
+    )
+
+    if not bench.smoke:
+        # write-once throughput entry: vmapped population rate vs a
+        # single-attacker run of the same chunk (both include compile)
+        with Timer() as t:
+            train_attacker_population(model_cfg, cuts=cuts[:1],
+                                      capture_weights=cw[:1], steps=steps,
+                                      seed=seed)
+        single_rate = steps / max(t.seconds, 1e-9)
+        pop_rate = res.population * steps / max(res.seconds, 1e-9)
+        record_baseline({
+            "attacker_population": {
+                "population": res.population,
+                "steps": steps,
+                "pop_steps_per_s": pop_rate,
+                "single_steps_per_s": single_rate,
+                "vmap_speedup": pop_rate / single_rate,
+            }
+        })
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    main(BenchConfig(smoke=a.smoke), seed=a.seed)

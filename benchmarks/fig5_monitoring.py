@@ -28,7 +28,11 @@ QS = [0.3, 0.45, 0.6, 0.75, 0.9]
 
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     prof = resnet101_profile(batch=1)
-    env = MHSLEnv(profile=prof)
+    # --leakage empirical swaps the paper's closed-form per-layer values
+    # for the trained attacker population's measurements; everything
+    # downstream (training, the q sweep, the derived reductions) is
+    # identical because both ride the same LeakageModel API
+    env = MHSLEnv(profile=prof, leakage_model=bench.leakage_model(seed))
     adims = env.action_dims
 
     agents = train_standard_agents(env, bench, seed,
@@ -62,7 +66,8 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
         "reduction_vs_sac_pct": 100 * (mean["sac"] - mean["icm_ca"]) / max(mean["sac"], 1e-9),
         "reduction_vs_ppo_pct": 100 * (mean["ppo"] - mean["icm_ca"]) / max(mean["ppo"], 1e-9),
     }
-    save_json("fig5_monitoring", {"rows": rows, "derived": derived})
+    save_json("fig5_monitoring",
+              {"rows": rows, "derived": derived, "leakage": bench.leakage})
     emit_csv_row("fig5/summary", 0.0,
                  f"leak_reduction_vs_sac={derived['reduction_vs_sac_pct']:.1f}% "
                  f"vs_ppo={derived['reduction_vs_ppo_pct']:.1f}%")
@@ -70,4 +75,12 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--leakage", default="analytic",
+                    choices=("analytic", "empirical"))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    main(BenchConfig(smoke=a.smoke, leakage=a.leakage), seed=a.seed)

@@ -37,7 +37,10 @@ E_MAX = 4
 
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     prof = resnet101_profile(batch=1)
-    env = MHSLEnv(profile=prof, net=replace(NetworkConfig(), num_eaves=E_MAX))
+    # bench.leakage selects the hop-pricing model (analytic | empirical
+    # attacker measurements) through the same LeakageModel API as fig5
+    env = MHSLEnv(profile=prof, net=replace(NetworkConfig(), num_eaves=E_MAX),
+                  leakage_model=bench.leakage_model(seed))
     # smoke mode keeps the tiny count - flooring it back to 40 would defeat
     # the CI rot-detector's minutes-on-CPU contract
     episodes = bench.episodes if bench.smoke else max(bench.episodes // 2, 40)
@@ -72,6 +75,7 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
     last = rows[ES[-1]]
     derived = {
         "rows": rows,
+        "leakage": bench.leakage,
         "reduction_vs_sac_at_E4_pct": 100 * (last["sac"] - last["icm_ca"]) / max(last["sac"], 1e-9),
         "reduction_vs_ppo_at_E4_pct": 100 * (last["ppo"] - last["icm_ca"]) / max(last["ppo"], 1e-9),
     }
@@ -83,4 +87,12 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--leakage", default="analytic",
+                    choices=("analytic", "empirical"))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    main(BenchConfig(smoke=a.smoke, leakage=a.leakage), seed=a.seed)

@@ -26,6 +26,7 @@ ALL = [
     "fig7_exploration",
     "fig8_no_location",
     "fig9_example",
+    "fig10_leakage_attack",
     "table_power",
     "roofline",
     "throughput",
@@ -41,6 +42,11 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: tiny counts, no baseline JSON writes")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--leakage", default="analytic",
+                    choices=("analytic", "empirical"),
+                    help="leakage model the fig benchmarks price hops "
+                         "with: the paper's closed-form values or the "
+                         "trained attacker population's measurements")
     args = ap.parse_args(argv)
 
     if args.full and args.smoke:
@@ -48,7 +54,8 @@ def main(argv=None) -> None:
     cache_dir = enable_persistent_cache()  # REPRO_JIT_CACHE_DIR opt-in
     if cache_dir:
         print(f"# jit cache: {cache_dir}", flush=True)
-    bench = BenchConfig(quick=not args.full, smoke=args.smoke)
+    bench = BenchConfig(quick=not args.full, smoke=args.smoke,
+                        leakage=args.leakage)
     names = ALL if not args.only else [
         n for n in ALL if any(n.startswith(o.strip()) for o in args.only.split(","))
     ]

@@ -13,11 +13,9 @@ from dataclasses import replace
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import load_pytree, save_pytree
-from repro.configs import get_config
-from repro.data import synthetic_stream
-from repro.models import init_params, make_train_step
-from repro.optim import adamw, linear_warmup_cosine
+from repro.api import (adamw, get_config, init_params, linear_warmup_cosine,
+                       load_pytree, make_train_step, save_pytree,
+                       synthetic_stream)
 
 
 def main():

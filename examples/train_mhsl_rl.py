@@ -20,24 +20,17 @@ import jax.numpy as jnp
 import numpy as np
 from dataclasses import replace
 
-from repro.configs import get_config
-from repro.core.agents import action_space as A
-from repro.core.agents import sac as SAC
-from repro.core.agents.loops import train_sac
-from repro.core.agents.sac import SACConfig
-from repro.core.channel import NetworkConfig
-from repro.core.env import MHSLEnv
-from repro.core.pipeline import PipelineConfig, make_stage_mesh, pipeline_step_fn
-from repro.core.profiles import transformer_profile
-from repro.models import init_params
-from repro.optim import adamw
+from repro.api import (MHSLEnv, NetworkConfig, PipelineConfig, SACConfig,
+                       adamw, flat_dim, get_config, init_params,
+                       make_stage_mesh, onehot, pipeline_step_fn,
+                       select_action, train_sac, transformer_profile)
 from repro.optim.optimizers import apply_updates
 
 
 def rollout_plan(env, params, cfg, seed=7):
     key = jax.random.PRNGKey(seed)
     st = env.reset(jax.random.PRNGKey(0))
-    pair_dim = env.obs_dim + A.flat_dim(env.action_dims)
+    pair_dim = env.obs_dim + flat_dim(env.action_dims)
     hist = jnp.zeros((cfg.hist_len, pair_dim))
     hmask = jnp.zeros((cfg.hist_len,))
     leaked = 0.0
@@ -45,8 +38,8 @@ def rollout_plan(env, params, cfg, seed=7):
         key, ka, ks = jax.random.split(key, 3)
         obs = env.observe(st)
         masks = env.action_masks(st)
-        a = SAC.select_action(params, ka, obs, hist, hmask, masks, env.action_dims, cfg)
-        pair = jnp.concatenate([obs, A.onehot(a, env.action_dims)])
+        a = select_action(params, ka, obs, hist, hmask, masks, env.action_dims, cfg)
+        pair = jnp.concatenate([obs, onehot(a, env.action_dims)])
         hist = jnp.roll(hist, -1, axis=0).at[-1].set(pair)
         hmask = jnp.roll(hmask, -1).at[-1].set(1.0)
         st, r, done, info = env.step(st, a, ks)

@@ -1,0 +1,49 @@
+"""Learned attacker-in-the-loop leakage evaluation.
+
+A trainable FSHA-style reconstruction adversary (encoder / decoder /
+discriminator, alternating jitted train step) measures how much a real
+eavesdropper learns from the smashed activations crossing each split
+boundary - the empirical counterpart of the paper's analytic Eq. 30
+model, surfaced through :class:`repro.core.leakage.EmpiricalLeakage`.
+"""
+from repro.attack.fsha import (
+    AttackConfig,
+    attack_scores,
+    flatten_rows,
+    init_attack_state,
+    init_attacker,
+    make_attack_chunk,
+    reconstruct,
+    smashed_activations,
+)
+from repro.attack.population import (
+    AttackResult,
+    capture_weight,
+    empirical_model_from,
+    init_attacker_population,
+    make_activation_scorer,
+    make_population_attack_chunk,
+    tiny_attack_model_cfg,
+    train_attacker_population,
+    train_empirical_model,
+)
+
+__all__ = [
+    "AttackConfig",
+    "AttackResult",
+    "attack_scores",
+    "capture_weight",
+    "empirical_model_from",
+    "flatten_rows",
+    "init_attack_state",
+    "init_attacker",
+    "init_attacker_population",
+    "make_activation_scorer",
+    "make_attack_chunk",
+    "make_population_attack_chunk",
+    "reconstruct",
+    "smashed_activations",
+    "tiny_attack_model_cfg",
+    "train_attacker_population",
+    "train_empirical_model",
+]

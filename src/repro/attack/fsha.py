@@ -1,0 +1,236 @@
+"""FSHA-style reconstruction adversary against smashed activations.
+
+The attacker observes the activations crossing a split boundary of the
+1F1B executor (Eq. 1's wireless hop) and tries to reconstruct the
+private stage-0 input. Following the feature-space-hijacking trio
+(*Unleashing the Tiger*, Pasquini et al.; *Evaluating Privacy Leakage in
+Split Learning*, Qiu et al.), the attacker trains three networks with an
+alternating step:
+
+* **encoder** ``enc``: captured smashed activation -> attacker feature
+  space;
+* **decoder** ``dec``: feature -> reconstructed private input;
+* **discriminator** ``disc``: separates features of the attacker's OWN
+  shadow pipeline (a re-initialized copy of the split model over public
+  auxiliary data) from features of captured client activations.
+
+Unlike full FSHA the client model is FIXED - we are *evaluating* the
+leakage of a given split, not hijacking the training protocol - so the
+adversarial game aligns the ATTACKER's encoder to the captured feature
+distribution: step A trains enc+dec on the shadow inversion loss plus a
+non-saturating generator loss on captured features; step B trains the
+discriminator to separate the two. Captured-activation terms are gated
+per step by a Bernoulli capture draw with the scenario's
+``capture_probability * monitor_prob`` weight, so the wireless physics
+(decoy powers, eavesdropper geometry, monitoring) shapes how much data
+the attacker effectively trains on.
+
+The whole training run is ONE jitted dispatch (``make_attack_chunk``,
+the ``rollout.make_train_chunk`` idiom: ``.fn``/``.jitted``/
+``.trace_count``), which is what ``repro.attack.population`` vmaps over
+a (split boundary x scenario) population.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import init_mlp, mlp_apply
+from repro.optim.optimizers import adamw, apply_updates
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class AttackConfig:
+    d_data: int  # private-input dim (stage-0 embedding width)
+    d_smash: int  # smashed-activation dim crossing the boundary
+    feat_dim: int = 32
+    hidden: int = 64
+    lr: float = 3e-3
+    disc_lr: float = 1e-3
+    adv_weight: float = 0.1  # weight of the captured-feature alignment loss
+    # weight of the supervised inversion loss on captured hops whose
+    # plaintext the attacker knows (the auxiliary-known-records assumption
+    # of Qiu et al.: the adversary holds some records of the training
+    # distribution, so a captured activation of a known record yields a
+    # supervised (x, z) pair). Gated by the same per-step capture draw.
+    known_weight: float = 1.0
+    batch: int = 64
+
+
+def attack_optimizers(cfg: AttackConfig):
+    return adamw(cfg.lr), adamw(cfg.disc_lr)
+
+
+def init_attacker(key, cfg: AttackConfig):
+    k_e, k_d, k_c = jax.random.split(key, 3)
+    return {
+        "atk": {
+            "enc": init_mlp(k_e, (cfg.d_smash, cfg.hidden, cfg.feat_dim)),
+            "dec": init_mlp(k_d, (cfg.feat_dim, cfg.hidden, cfg.d_data)),
+        },
+        "disc": init_mlp(k_c, (cfg.feat_dim, cfg.hidden, 1)),
+    }
+
+
+def init_attack_state(params, cfg: AttackConfig):
+    opt_a, opt_d = attack_optimizers(cfg)
+    return opt_a.init(params["atk"]), opt_d.init(params["disc"])
+
+
+def reconstruct(params, z: Array) -> Array:
+    """dec(enc(z)): the attacker's input reconstruction."""
+    return mlp_apply(params["atk"]["dec"], mlp_apply(params["atk"]["enc"], z))
+
+
+def attack_scores(params, z: Array, x: Array):
+    """(attack accuracy, reconstruction MSE) on held-out client data.
+
+    Accuracy is the variance-explained of the reconstruction
+    (1 - MSE/Var(x)) clipped to [0, 1] - 0 means the attacker does no
+    better than predicting the mean, 1 means perfect reconstruction.
+    This is the empirical per-boundary information value that
+    :class:`repro.core.leakage.EmpiricalLeakage` prices hops with.
+    """
+    rec = reconstruct(params, z)
+    mse = jnp.mean((rec - x) ** 2)
+    var = jnp.mean((x - x.mean(axis=0, keepdims=True)) ** 2)
+    return jnp.clip(1.0 - mse / jnp.maximum(var, 1e-12), 0.0, 1.0), mse
+
+
+def _attacker_loss(atk, disc, cfg: AttackConfig, z_aux, x_aux, z_cli, x_cli,
+                   cap):
+    # shadow inversion: invert the attacker's own (re-initialized) pipeline
+    f_aux = mlp_apply(atk["enc"], z_aux)
+    rec = mlp_apply(atk["dec"], f_aux)
+    l_rec = jnp.mean((rec - x_aux) ** 2)
+    f_cli = mlp_apply(atk["enc"], z_cli)
+    # known-record inversion: captured activations of records the attacker
+    # holds the plaintext for give supervised pairs (Qiu et al.)
+    rec_cli = mlp_apply(atk["dec"], f_cli)
+    l_known = jnp.mean((rec_cli - x_cli) ** 2)
+    # captured-feature alignment (non-saturating generator loss); both
+    # client terms are active only on steps where the eavesdropper
+    # actually captured the hop
+    logit = mlp_apply(disc, f_cli)[..., 0]
+    l_adv = jnp.mean(jax.nn.softplus(-logit))
+    loss = l_rec + cap * (cfg.known_weight * l_known + cfg.adv_weight * l_adv)
+    return loss, (l_known, l_adv)
+
+
+def _disc_loss(disc, f_aux, f_cli, cap):
+    l_real = jnp.mean(jax.nn.softplus(-mlp_apply(disc, f_aux)[..., 0]))
+    l_fake = jnp.mean(jax.nn.softplus(mlp_apply(disc, f_cli)[..., 0]))
+    return l_real + cap * l_fake
+
+
+def make_attack_chunk(cfg: AttackConfig, n_steps: int):
+    """ONE jitted call running ``n_steps`` alternating attacker updates.
+
+    Returns ``chunk(params, opt_state, pools, p_eff, key) ->
+    (params, opt_state, metrics)`` where ``pools`` is the device-resident
+    data ``{"z_cli": (P, d_smash), "x_cli": (P, d_data),
+    "z_aux": (P, d_smash), "x_aux": (P, d_data)}``, ``p_eff`` the scalar
+    per-step capture probability (capture_probability x monitor_prob of
+    the scenario), and ``metrics`` per-step traces
+    ``{"recon_mse", "adv", "disc", "cap"}`` each ``(n_steps,)``
+    (``recon_mse`` is the known-record reconstruction loss the CI smoke
+    gate tracks). Exposes ``.fn`` (untraced, for the population
+    vmap), ``.jitted`` and ``.trace_count`` like
+    ``rollout.make_train_chunk``.
+    """
+    opt_a, opt_d = attack_optimizers(cfg)
+    trace_count = [0]
+
+    def fn(params, opt_state, pools, p_eff, key):
+        trace_count[0] += 1
+        pool = pools["z_cli"].shape[0]
+
+        def step(carry, k):
+            params, (sa, sd) = carry
+            ki, kc = jax.random.split(k)
+            idx = jax.random.randint(ki, (cfg.batch,), 0, pool)
+            z_aux = pools["z_aux"][idx]
+            x_aux = pools["x_aux"][idx]
+            z_cli = pools["z_cli"][idx]
+            x_cli = pools["x_cli"][idx]
+            cap = (jax.random.uniform(kc) < p_eff).astype(jnp.float32)
+
+            # step A: attacker (encoder + decoder)
+            (_, (l_known, l_adv)), g = jax.value_and_grad(
+                _attacker_loss, has_aux=True)(
+                params["atk"], params["disc"], cfg, z_aux, x_aux, z_cli,
+                x_cli, cap)
+            ups, sa = opt_a.update(g, sa, params["atk"])
+            atk = apply_updates(params["atk"], ups)
+
+            # step B: discriminator, on the UPDATED encoder's features
+            f_aux = jax.lax.stop_gradient(mlp_apply(atk["enc"], z_aux))
+            f_cli = jax.lax.stop_gradient(mlp_apply(atk["enc"], z_cli))
+            l_d, gd = jax.value_and_grad(_disc_loss)(
+                params["disc"], f_aux, f_cli, cap)
+            upd, sd = opt_d.update(gd, sd, params["disc"])
+            disc = apply_updates(params["disc"], upd)
+
+            metrics = {"recon_mse": l_known, "adv": l_adv, "disc": l_d,
+                       "cap": cap}
+            return ({"atk": atk, "disc": disc}, (sa, sd)), metrics
+
+        keys = jax.random.split(key, n_steps)
+        (params, opt_state), ms = jax.lax.scan(step, (params, opt_state), keys)
+        return params, opt_state, ms
+
+    jitted = jax.jit(fn)
+
+    def chunk(params, opt_state, pools, p_eff, key):
+        return jitted(params, opt_state, pools, p_eff, key)
+
+    chunk.fn = fn
+    chunk.jitted = jitted
+    chunk.trace_count = trace_count
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# smashed activations: what actually crosses each 1F1B stage boundary
+# ---------------------------------------------------------------------------
+
+
+def smashed_activations(params, model_cfg, tokens, cuts):
+    """Stage-boundary activations of the split model for ``tokens``.
+
+    Returns ``(x0, z)`` with ``x0`` (B, T, d) the private stage-0 input
+    (the embedding - what the attacker reconstructs) and ``z``
+    (K, B, T, d) the activation AFTER layer ``cuts[k]`` - exactly the
+    tensor ``pipeline_step_fn``'s forward slot ships over hop k when the
+    plan's cumulative boundary is ``cuts[k]`` (the stage-input stash of
+    the next stage).
+    """
+    from repro.models import model as M
+
+    sig = M.signature(model_cfg)
+    period = M.find_period(sig)
+    if period != 1:
+        raise ValueError(
+            f"attack assumes layer-group period 1 (got period {period}); "
+            "same restriction as the pipeline executor")
+    blocks = params["slots"][0]
+    x0 = params["embed"][tokens]  # (B, T, d)
+    positions = jnp.arange(tokens.shape[-1])
+
+    def body(x, blk):
+        out, _, _ = M.block_apply(blk, x, model_cfg, sig[0],
+                                  positions=positions)
+        return out, out
+
+    _, ys = jax.lax.scan(body, x0, blocks)  # (L, B, T, d)
+    cuts = jnp.asarray(cuts, jnp.int32)
+    return x0, ys[cuts - 1]
+
+
+def flatten_rows(x: Array) -> Array:
+    """(..., B, T, d) -> (..., B*T, d): token-position rows for the MLPs."""
+    return x.reshape(x.shape[:-3] + (x.shape[-3] * x.shape[-2], x.shape[-1]))

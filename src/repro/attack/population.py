@@ -1,0 +1,295 @@
+"""Attacker populations: one adversary per (split boundary x scenario).
+
+The fused single-attacker chunk (:func:`repro.attack.fsha.
+make_attack_chunk`) vmaps over a flattened (boundary x scenario) axis
+exactly like ``scenario.train_population`` vmaps the SAC chunk: every
+attacker trains in lockstep inside ONE jitted dispatch (1-trace audit
+via ``.trace_count``), each against its own smashed-activation pool and
+its scenario's capture probability.
+
+``train_attacker_population`` is the end-to-end driver: it builds the
+client model and the attacker's shadow copy, extracts the stage-boundary
+activations for every requested cut point, trains the population, and
+measures per-boundary attack accuracy on held-out client data.
+``train_empirical_model`` wraps it into a ready
+:class:`repro.core.leakage.EmpiricalLeakage`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.attack.fsha import (
+    AttackConfig,
+    attack_scores,
+    flatten_rows,
+    init_attack_state,
+    init_attacker,
+    make_attack_chunk,
+    smashed_activations,
+)
+from repro.core.leakage import EmpiricalLeakage, capture_probability
+
+Array = jax.Array
+
+
+def capture_weight(monitor_prob: float, *, p_tx: float = 0.5,
+                   dist_tx_e: float = 300.0,
+                   decoy_p: Sequence[float] = (0.2,),
+                   decoy_dist_e: Sequence[float] = (300.0,),
+                   o: float = 1.0) -> float:
+    """Effective per-hop capture probability of one eavesdropper under a
+    canonical geometry: Theorem 1's capture probability times the
+    monitoring probability. This is the Bernoulli weight gating how often
+    the attacker's training step actually receives a captured batch."""
+    dp = jnp.asarray(decoy_p, jnp.float32)
+    dde = jnp.asarray(decoy_dist_e, jnp.float32)[:, None]
+    cap = capture_probability(jnp.float32(p_tx),
+                              jnp.asarray([dist_tx_e], jnp.float32), dp, dde, o)
+    return float(cap[0]) * float(monitor_prob)
+
+
+def init_attacker_population(key, cfg: AttackConfig, n: int):
+    """Stacked params + optimizer states for ``n`` attackers (axis 0)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_attacker(k, cfg))(keys)
+    opt_state = jax.vmap(lambda p: init_attack_state(p, cfg))(params)
+    return params, opt_state
+
+
+def make_population_attack_chunk(cfg: AttackConfig, n_steps: int):
+    """vmapped attacker-population train chunk, ONE jitted dispatch.
+
+    ``pop(params, opt_state, pools, p_eff, keys)`` with every argument
+    stacked on a leading population axis (pools is a dict of (N, P, d)
+    arrays, ``p_eff`` (N,), ``keys`` (N, 2)). Exposes ``.fn``/
+    ``.jitted``/``.trace_count`` - the audit asserts ``trace_count == 1``
+    across every (boundary x scenario) batch of the same shapes.
+    """
+    chunk = make_attack_chunk(cfg, n_steps)
+    fn = jax.vmap(chunk.fn, in_axes=(0, 0, 0, 0, 0))
+    jitted = jax.jit(fn)
+
+    def pop(params, opt_state, pools, p_eff, keys):
+        return jitted(params, opt_state, pools, p_eff, keys)
+
+    pop.fn = fn
+    pop.jitted = jitted
+    pop.trace_count = chunk.trace_count
+    return pop
+
+
+@dataclass
+class AttackResult:
+    """Trained population + measurements.
+
+    ``scores``/``final_mse`` are (n_cuts, n_scenarios): held-out attack
+    accuracy (variance-explained, in [0, 1]) and reconstruction MSE.
+    ``recon_mse`` is the per-step training trace
+    (n_cuts, n_scenarios, steps) - the CI smoke gate checks it decreases
+    monotonically-on-average. ``params`` keeps the stacked population
+    (leading axis cut-major: attacker ``k * n_scenarios + s``).
+    """
+
+    params: Any
+    opt_state: Any
+    scores: np.ndarray
+    final_mse: np.ndarray
+    recon_mse: np.ndarray
+    cuts: np.ndarray
+    capture_weights: np.ndarray
+    num_layers: int
+    trace_count: list
+    seconds: float
+    steps: int
+
+    @property
+    def population(self) -> int:
+        return self.scores.size
+
+
+def _tile_cuts_scenarios(per_cut: Array, n_scen: int) -> Array:
+    """(K, ...) -> (K * n_scen, ...), cut-major attacker order."""
+    return jnp.repeat(per_cut, n_scen, axis=0)
+
+
+def _standardize(a: Array, eps: float = 1e-6):
+    """Zero-mean/unit-std per dim over the pool axis (-2); returns stats."""
+    m = a.mean(axis=-2, keepdims=True)
+    s = a.std(axis=-2, keepdims=True) + eps
+    return (a - m) / s, m, s
+
+
+def train_attacker_population(
+    model_cfg,
+    *,
+    cuts: Sequence[int],
+    capture_weights: Sequence[float],
+    acfg: Optional[AttackConfig] = None,
+    steps: int = 300,
+    seed: int = 0,
+    train_tokens=(32, 64),
+    eval_tokens=(8, 64),
+    embed_scale: float = 25.0,
+) -> AttackResult:
+    """Train one attacker per (cut point x scenario) in one dispatch.
+
+    ``cuts`` are cumulative layer indices (1..L-1) of ``model_cfg``;
+    ``capture_weights`` the per-scenario effective capture probabilities
+    (:func:`capture_weight`). The client model and the attacker's shadow
+    model are two independent initializations of ``model_cfg`` - the
+    shadow supplies the attacker's (x, z) inversion pairs, captured
+    client activations only enter through the capture-gated adversarial
+    alignment, so low-capture scenarios genuinely learn less.
+
+    ``embed_scale`` lifts the probe models' embedding table to O(1)
+    magnitude: a randomly initialized embedding is ~50x smaller than the
+    block outputs it rides the residual stream with, which makes the
+    token signal in a smashed activation vanishingly small - unlike a
+    trained model, whose embeddings carry O(1) token information. The
+    rescale restores a realistic signal-to-block ratio for the probe.
+    """
+    cuts = np.asarray(cuts, np.int64)
+    capture_weights = np.asarray(capture_weights, np.float64)
+    n_scen = len(capture_weights)
+    n = len(cuts) * n_scen
+    if acfg is None:
+        acfg = AttackConfig(d_data=model_cfg.d_model, d_smash=model_cfg.d_model)
+
+    key = jax.random.PRNGKey(seed)
+    k_cli, k_shadow, k_tok, k_init, k_train = jax.random.split(key, 5)
+    from repro.models import init_params
+
+    cli_params = init_params(k_cli, model_cfg)
+    shadow_params = init_params(k_shadow, model_cfg)
+    cli_params["embed"] = cli_params["embed"] * embed_scale
+    shadow_params["embed"] = shadow_params["embed"] * embed_scale
+
+    kt_cli, kt_aux, kt_ev = jax.random.split(k_tok, 3)
+    toks = lambda k, shape: jax.random.randint(k, shape, 0, model_cfg.vocab_size)
+    t_cli, t_aux, t_ev = (toks(kt_cli, train_tokens), toks(kt_aux, train_tokens),
+                          toks(kt_ev, eval_tokens))
+
+    # (K, P, d) pools: client activations (captured), shadow pairs (owned).
+    # Everything is standardized per cut over the pool axis - activation
+    # scale grows with residual depth, and the variance-explained score is
+    # computed in the same standardized space (held-out data uses the
+    # TRAIN pool's client statistics).
+    x_cli, z_cli = smashed_activations(cli_params, model_cfg, t_cli, cuts)
+    x_aux, z_aux = smashed_activations(shadow_params, model_cfg, t_aux, cuts)
+    x_ev, z_ev = smashed_activations(cli_params, model_cfg, t_ev, cuts)
+    z_cli, zc_m, zc_s = _standardize(flatten_rows(z_cli))
+    z_aux, _, _ = _standardize(flatten_rows(z_aux))
+    z_ev = (flatten_rows(z_ev) - zc_m) / zc_s
+    x_cli, xc_m, xc_s = _standardize(flatten_rows(x_cli))
+    x_aux, _, _ = _standardize(flatten_rows(x_aux))
+    x_ev = (flatten_rows(x_ev) - xc_m) / xc_s
+    x_cli = jnp.broadcast_to(x_cli[None], z_cli.shape)
+    x_aux = jnp.broadcast_to(x_aux[None], z_aux.shape)
+    x_ev = jnp.broadcast_to(x_ev[None], z_ev.shape)
+
+    pools = {
+        "z_cli": _tile_cuts_scenarios(z_cli, n_scen),
+        "x_cli": _tile_cuts_scenarios(x_cli, n_scen),
+        "z_aux": _tile_cuts_scenarios(z_aux, n_scen),
+        "x_aux": _tile_cuts_scenarios(x_aux, n_scen),
+    }
+    p_eff = jnp.tile(jnp.asarray(capture_weights, jnp.float32), len(cuts))
+
+    params, opt_state = init_attacker_population(k_init, acfg, n)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        k_train, jnp.arange(n))
+
+    pop = make_population_attack_chunk(acfg, steps)
+    t0 = time.time()
+    params, opt_state, metrics = pop(params, opt_state, pools, p_eff, keys)
+    jax.block_until_ready(params)
+    seconds = time.time() - t0
+
+    sc, mse = jax.vmap(attack_scores)(
+        params, _tile_cuts_scenarios(z_ev, n_scen),
+        _tile_cuts_scenarios(x_ev, n_scen))
+    shape = (len(cuts), n_scen)
+    return AttackResult(
+        params=params,
+        opt_state=opt_state,
+        scores=np.asarray(sc).reshape(shape),
+        final_mse=np.asarray(mse).reshape(shape),
+        recon_mse=np.asarray(metrics["recon_mse"]).reshape(shape + (steps,)),
+        cuts=cuts,
+        capture_weights=capture_weights,
+        num_layers=model_cfg.num_layers,
+        trace_count=pop.trace_count,
+        seconds=seconds,
+        steps=steps,
+    )
+
+
+def make_activation_scorer(stacked_params):
+    """Live-activation scorer for :class:`EmpiricalLeakage.score_fn`.
+
+    ``stacked_params`` is a trained attacker population whose leading
+    axis matches the hop axis of the activations dict
+    ``{"z": (H, n, d_smash), "x": (H, n, d_data)}``; returns per-hop
+    attack accuracies (H,).
+    """
+
+    def score(activations):
+        def one(p, z, x):
+            s, _ = attack_scores(p, z, x)
+            return s
+
+        return jax.vmap(one)(stacked_params, activations["z"],
+                             activations["x"])
+
+    return score
+
+
+def empirical_model_from(result: AttackResult, *, scenario_idx: int = 0,
+                         num_layers: Optional[int] = None,
+                         with_scorer: bool = False) -> EmpiricalLeakage:
+    """Wrap one scenario column of an :class:`AttackResult` into an
+    :class:`EmpiricalLeakage` (interpolated onto ``num_layers``)."""
+    score_fn = None
+    if with_scorer:
+        n_scen = len(result.capture_weights)
+        col = jax.tree.map(lambda a: a[scenario_idx::n_scen], result.params)
+        score_fn = make_activation_scorer(col)
+    return EmpiricalLeakage.from_scores(
+        result.cuts, result.scores[:, scenario_idx], result.num_layers,
+        num_layers=num_layers, score_fn=score_fn)
+
+
+def tiny_attack_model_cfg(depth: int = 8, d_model: int = 32):
+    """Reduced transformer the quick empirical model measures leakage on."""
+    from repro.configs import get_config
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    return replace(cfg, num_layers=depth, d_model=d_model, num_heads=2,
+                   num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=256,
+                   name=f"attack-probe-{depth}x{d_model}")
+
+
+def train_empirical_model(*, seed: int = 0, steps: int = 400,
+                          depth: int = 8, d_model: int = 32,
+                          monitor_prob: float = 0.8,
+                          num_layers: Optional[int] = None) -> EmpiricalLeakage:
+    """One-call empirical leakage model: train a small attacker population
+    over every cut of a reduced transformer and return the measured
+    per-layer values as an :class:`EmpiricalLeakage` (interpolated onto
+    ``num_layers`` when pricing a different profile's depth). This is
+    what the fig benchmarks' ``--leakage empirical`` flag builds."""
+    model_cfg = tiny_attack_model_cfg(depth, d_model)
+    res = train_attacker_population(
+        model_cfg,
+        cuts=np.arange(1, depth),
+        capture_weights=[capture_weight(monitor_prob)],
+        steps=steps,
+        seed=seed,
+    )
+    return empirical_model_from(res, num_layers=num_layers)

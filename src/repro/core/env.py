@@ -46,7 +46,7 @@ from repro.core.channel import (
     sample_positions,
     tx_time,
 )
-from repro.core.leakage import sample_leakage
+from repro.core.leakage import AnalyticLeakage, LeakageModel
 from repro.core.profiles import LayerProfile, profile_table
 from repro.core.scenario import ScenarioParams, scenario_from_net
 
@@ -71,12 +71,21 @@ class EnvState(NamedTuple):
     leaked: Array  # cumulative information leaked (for metrics)
 
 
+_DEFAULT_LEAKAGE = AnalyticLeakage()
+
+
 @dataclass(frozen=True)
 class MHSLEnv:
     profile: LayerProfile
     net: NetworkConfig = NetworkConfig()
     know_eave_locations: bool = True
     leak_scale: float = 1.0
+    # LeakageModel pricing the per-hop information values + the Monte-Carlo
+    # draw in step(); None = the paper's AnalyticLeakage (bit-identical to
+    # the pre-protocol free functions). Pass an EmpiricalLeakage to score
+    # hops with attacker-measured values instead of the assumed leak_norm
+    # decay (repro.attack.train_empirical_model builds one).
+    leakage_model: Optional[LeakageModel] = None
 
     # ---- static structure --------------------------------------------------
     @property
@@ -166,16 +175,21 @@ class MHSLEnv:
         oracle.trace_count = scorer.trace_count
         return oracle
 
+    def _leakage(self) -> LeakageModel:
+        return _DEFAULT_LEAKAGE if self.leakage_model is None else self.leakage_model
+
     # ---- constants as jnp --------------------------------------------------
     def _consts(self):
         # hoisted per-profile host tables (cached across envs sharing the
         # profile); the jnp.asarray casts reproduce the seed's f32 values
-        # bit-exactly inside each trace
+        # bit-exactly inside each trace. The per-layer information values
+        # route through the LeakageModel: identity for AnalyticLeakage,
+        # attacker-measured scores for EmpiricalLeakage.
         t = profile_table(self.profile)
         return (
             jnp.asarray(t.act_bits),
             jnp.asarray(t.grad_bits),
-            jnp.asarray(t.leak_norm),
+            jnp.asarray(self._leakage().layer_values(t.leak_norm)),
             jnp.asarray(t.fwd_cum),
             jnp.asarray(t.bwd_cum),
         )
@@ -384,7 +398,7 @@ class MHSLEnv:
         delta = leak_v[boundary_layer] * sp.leak_scale
         leak = jnp.where(
             has_hop,
-            sample_leakage(
+            self._leakage().sample_leakage(
                 key, p_tx, d_tx_e, decoy_p, decoy_dist_e, q_e, delta, sp.rayleigh_o
             ),
             0.0,

@@ -1,6 +1,6 @@
-"""Eavesdropper & leakage model: Eq. 12-13, Theorem 1, Corollaries 1-2.
+"""Eavesdropper & leakage model behind the unified :class:`LeakageModel` API.
 
-All expressions follow the paper exactly:
+All analytic expressions follow the paper exactly:
   * an eavesdropper locks onto the max-SNR signal among {trainer} U decoys
     (Eq. 12) under Rayleigh fading, giving capture probability
       P(e captures trainer) = prod_d  p_s m_s,e^-2 / (p_d m_d,e^-2 + p_s m_s,e^-2)
@@ -8,86 +8,356 @@ All expressions follow the paper exactly:
   * expected leakage of one hop = sum_e P_capture(e) * q_e * delta (Eq. 30);
   * closed-form optimal powers for |D|=1 (Corollary 1) and |E|=1
     (Corollary 2).
+
+Two implementations share the protocol:
+
+* :class:`AnalyticLeakage` - the paper's model. The per-layer information
+  value ``delta`` comes from the profile's depth-decaying ``leak_norm``
+  table (an ASSUMPTION about how much an activation reveals).
+* :class:`EmpiricalLeakage` - the same wireless physics (capture +
+  monitoring), but the per-layer value is MEASURED by a trained
+  reconstruction adversary (``repro.attack``): the attacker's attack
+  accuracy (variance-explained of its input reconstruction) at each cut
+  point replaces the assumed ``leak_norm`` decay.
+
+Both expose ``evaluate(scenario, plan, activations=None, key=None)``
+over a per-hop :class:`HopGeometry` batch, and every consumer
+(``env.step``, ``scenario.evaluate_population``, the fig benchmarks)
+threads the model rather than calling the free functions, so swapping
+analytic for empirical is a one-argument change.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.channel import NetworkConfig, channel_gain
 
 Array = jax.Array
 
-
-def capture_probability(
-    p_tx: Array,  # scalar trainer power
-    dist_tx_e: Array,  # (E,) trainer -> eavesdropper distances
-    decoy_p: Array,  # (U,) decoy powers (0 for non-decoys)
-    decoy_dist_e: Array,  # (U, E) decoy -> eavesdropper distances
-    o: float = 1.0,
-) -> Array:
-    """Theorem 1 product term, per eavesdropper. Returns (E,)."""
-    s_tx = p_tx * channel_gain(dist_tx_e, o)  # (E,)
-    s_d = decoy_p[:, None] * channel_gain(decoy_dist_e, o)  # (U, E)
-    # P(S_d < S_tx) per decoy; inactive decoys (p=0) contribute factor 1
-    frac = s_tx[None, :] / jnp.maximum(s_d + s_tx[None, :], 1e-30)  # (U, E)
-    frac = jnp.where(decoy_p[:, None] > 0, frac, 1.0)
-    return jnp.prod(frac, axis=0)  # (E,)
-
-
-def expected_leakage(
-    p_tx: Array,
-    dist_tx_e: Array,
-    decoy_p: Array,
-    decoy_dist_e: Array,
-    q_e: Array,  # (E,) monitoring probabilities
-    delta: Array,  # scalar information value of this hop
-    o: float = 1.0,
-) -> Array:
-    """Eq. 30: E[I] for one hop."""
-    cap = capture_probability(p_tx, dist_tx_e, decoy_p, decoy_dist_e, o)
-    return jnp.sum(cap * q_e) * delta
+__all__ = [
+    "LeakageModel",
+    "AnalyticLeakage",
+    "EmpiricalLeakage",
+    "HopGeometry",
+    "plan_hop_geometry",
+    "evaluate_leakage",
+    # legacy free functions (thin wrappers over AnalyticLeakage)
+    "capture_probability",
+    "expected_leakage",
+    "sample_leakage",
+    "optimal_powers_single_decoy",
+    "optimal_powers_single_eave",
+]
 
 
-def sample_leakage(
-    key,
-    p_tx: Array,
-    dist_tx_e: Array,
-    decoy_p: Array,
-    decoy_dist_e: Array,
-    q_e: Array,
-    delta: Array,
-    o=1.0,
-) -> Array:
-    """Monte-Carlo single-draw leakage (Eqs. 12-13, 20-21): sample Rayleigh
-    SNRs, pick the argmax per eavesdropper, sample the monitoring Bernoulli.
+class HopGeometry(NamedTuple):
+    """Transmit geometry of the forward hops of one split plan.
 
-    The PRNG key is folded per eavesdropper INDEX, so each eavesdropper's
-    draw depends only on its own slot: extending the eavesdropper axis with
-    padded entries (``q_e`` masked to 0) leaves the active eavesdroppers'
-    samples bit-identical to a smaller-E environment. This is what makes
-    the padded-E scenario sweep (``ScenarioParams.eave_mask``) exactly
-    equivalent to re-instantiating a smaller env.
+    Leading axis = hops (H = S-1 for an S-stage plan). This is the
+    ``plan`` argument of :meth:`LeakageModel.evaluate`; build it from a
+    concrete plan + positions with :func:`plan_hop_geometry`.
     """
-    e = dist_tx_e.shape[0]
-    mean_tx = p_tx * channel_gain(dist_tx_e, o)  # (E,)
-    mean_d = decoy_p[:, None] * channel_gain(decoy_dist_e, o)  # (U, E)
-    means = jnp.concatenate([mean_tx[None, :], mean_d], axis=0)  # (U+1, E)
 
-    def one_eave(ke, mean_col, q):
-        ks, km = jax.random.split(ke)
-        # Rayleigh power ~ Exponential(mean = p h): sample via -mean*log(U)
-        un = jax.random.uniform(ks, mean_col.shape, minval=1e-12, maxval=1.0)
-        snr = -mean_col * jnp.log(un)
-        captured = jnp.argmax(snr) == 0  # trainer had max SNR
-        monitored = jax.random.uniform(km) < q
-        return captured & monitored
+    p_tx: Array  # (H,) trainer transmit power per hop
+    dist_tx_e: Array  # (H, E) trainer -> eavesdropper distances
+    decoy_p: Array  # (H, D) decoy powers (0 for inactive decoys)
+    decoy_dist_e: Array  # (H, D, E) decoy -> eavesdropper distances
+    boundary_layer: Array  # (H,) int32 cut-layer index (0-based) per hop
 
-    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, jnp.arange(e))
-    hits = jax.vmap(one_eave)(keys, means.T, q_e)
-    return jnp.sum(hits) * delta
+    @property
+    def num_hops(self) -> int:
+        return self.p_tx.shape[0]
+
+
+@runtime_checkable
+class LeakageModel(Protocol):
+    """Unified per-hop leakage estimator.
+
+    ``evaluate(scenario, plan, activations=None, key=None)`` returns the
+    per-hop leakage ``(H,)`` of ``plan`` under ``scenario``'s physics:
+    expected leakage when ``key`` is None, a Monte-Carlo draw otherwise.
+    ``activations`` optionally carries the smashed activations crossing
+    each hop (``{"z": (H, n, d), "x": (H, n, d)}``) for models that can
+    score live activations instead of a per-layer table.
+
+    ``layer_values(leak_norm)`` maps the profile's per-layer information
+    table to the table this model prices hops with (identity for the
+    analytic model) - the hook ``MHSLEnv`` threads through its reward.
+    """
+
+    def evaluate(self, scenario, plan: HopGeometry, activations=None,
+                 key=None) -> Array: ...
+
+    def layer_values(self, leak_norm: np.ndarray) -> np.ndarray: ...
+
+
+@dataclass(frozen=True, eq=False)
+class AnalyticLeakage:
+    """The paper's closed-form leakage model (Theorem 1 + Eq. 30).
+
+    ``value_table`` (per-layer information values, shape (L,)) is only
+    needed for :meth:`evaluate`; build it from a profile with
+    :meth:`for_profile`. The method bodies are the bit-exact homes of the
+    former module-level free functions.
+    """
+
+    value_table: Optional[np.ndarray] = None
+
+    @classmethod
+    def for_profile(cls, profile) -> "AnalyticLeakage":
+        from repro.core.profiles import profile_table
+
+        return cls(value_table=profile_table(profile).leak_norm)
+
+    # ---- per-layer information values (env hook) --------------------------
+    def layer_values(self, leak_norm: np.ndarray) -> np.ndarray:
+        """Analytic model prices hops with the profile table unchanged."""
+        return leak_norm
+
+    # ---- Theorem 1 --------------------------------------------------------
+    def capture_probability(
+        self,
+        p_tx: Array,  # scalar trainer power
+        dist_tx_e: Array,  # (E,) trainer -> eavesdropper distances
+        decoy_p: Array,  # (U,) decoy powers (0 for non-decoys)
+        decoy_dist_e: Array,  # (U, E) decoy -> eavesdropper distances
+        o: float = 1.0,
+    ) -> Array:
+        """Theorem 1 product term, per eavesdropper. Returns (E,)."""
+        s_tx = p_tx * channel_gain(dist_tx_e, o)  # (E,)
+        s_d = decoy_p[:, None] * channel_gain(decoy_dist_e, o)  # (U, E)
+        # P(S_d < S_tx) per decoy; inactive decoys (p=0) contribute factor 1
+        frac = s_tx[None, :] / jnp.maximum(s_d + s_tx[None, :], 1e-30)  # (U, E)
+        frac = jnp.where(decoy_p[:, None] > 0, frac, 1.0)
+        return jnp.prod(frac, axis=0)  # (E,)
+
+    # ---- Eq. 30 -----------------------------------------------------------
+    def expected_leakage(
+        self,
+        p_tx: Array,
+        dist_tx_e: Array,
+        decoy_p: Array,
+        decoy_dist_e: Array,
+        q_e: Array,  # (E,) monitoring probabilities
+        delta: Array,  # scalar information value of this hop
+        o: float = 1.0,
+    ) -> Array:
+        """Eq. 30: E[I] for one hop."""
+        cap = self.capture_probability(p_tx, dist_tx_e, decoy_p, decoy_dist_e, o)
+        return jnp.sum(cap * q_e) * delta
+
+    # ---- Monte-Carlo draw (Eqs. 12-13, 20-21) -----------------------------
+    def sample_leakage(
+        self,
+        key,
+        p_tx: Array,
+        dist_tx_e: Array,
+        decoy_p: Array,
+        decoy_dist_e: Array,
+        q_e: Array,
+        delta: Array,
+        o=1.0,
+    ) -> Array:
+        """Monte-Carlo single-draw leakage: sample Rayleigh SNRs, pick the
+        argmax per eavesdropper, sample the monitoring Bernoulli.
+
+        The PRNG key is folded per eavesdropper INDEX, so each
+        eavesdropper's draw depends only on its own slot: extending the
+        eavesdropper axis with padded entries (``q_e`` masked to 0) leaves
+        the active eavesdroppers' samples bit-identical to a smaller-E
+        environment. This is what makes the padded-E scenario sweep
+        (``ScenarioParams.eave_mask``) exactly equivalent to
+        re-instantiating a smaller env.
+        """
+        e = dist_tx_e.shape[0]
+        mean_tx = p_tx * channel_gain(dist_tx_e, o)  # (E,)
+        mean_d = decoy_p[:, None] * channel_gain(decoy_dist_e, o)  # (U, E)
+        means = jnp.concatenate([mean_tx[None, :], mean_d], axis=0)  # (U+1, E)
+
+        def one_eave(ke, mean_col, q):
+            ks, km = jax.random.split(ke)
+            # Rayleigh power ~ Exponential(mean = p h): sample via -mean*log(U)
+            un = jax.random.uniform(ks, mean_col.shape, minval=1e-12, maxval=1.0)
+            snr = -mean_col * jnp.log(un)
+            captured = jnp.argmax(snr) == 0  # trainer had max SNR
+            monitored = jax.random.uniform(km) < q
+            return captured & monitored
+
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, jnp.arange(e))
+        hits = jax.vmap(one_eave)(keys, means.T, q_e)
+        return jnp.sum(hits) * delta
+
+    # ---- unified entry point ----------------------------------------------
+    def _hop_values(self, plan: HopGeometry, activations) -> Array:
+        """Per-hop information values (H,) before the leak_scale factor."""
+        if self.value_table is None:
+            raise ValueError(
+                "evaluate() needs a per-layer value table - construct the "
+                "model via AnalyticLeakage.for_profile(profile) (or "
+                "EmpiricalLeakage.from_scores)")
+        return jnp.asarray(self.value_table)[plan.boundary_layer]
+
+    def evaluate(self, scenario, plan: HopGeometry, activations=None,
+                 key=None) -> Array:
+        """Per-hop leakage (H,) of ``plan`` under ``scenario``.
+
+        ``key=None`` -> Eq. 30 expectation; otherwise one Monte-Carlo
+        draw per hop (key folded per hop index). ``activations`` is
+        ignored by the analytic model.
+        """
+        q_e = scenario.monitor_prob * scenario.eave_mask
+        delta = self._hop_values(plan, activations) * scenario.leak_scale  # (H,)
+        o = scenario.rayleigh_o
+        if key is None:
+            def one(g_p, g_de, g_dp, g_dde, d):
+                return self.expected_leakage(g_p, g_de, g_dp, g_dde, q_e, d, o)
+        else:
+            hop_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                key, jnp.arange(plan.num_hops))
+
+            def one(g_p, g_de, g_dp, g_dde, d, k):
+                return self.sample_leakage(k, g_p, g_de, g_dp, g_dde, q_e, d, o)
+
+            return jax.vmap(one)(plan.p_tx, plan.dist_tx_e, plan.decoy_p,
+                                 plan.decoy_dist_e, delta, hop_keys)
+        return jax.vmap(one)(plan.p_tx, plan.dist_tx_e, plan.decoy_p,
+                             plan.decoy_dist_e, delta)
+
+
+@dataclass(frozen=True, eq=False)
+class EmpiricalLeakage(AnalyticLeakage):
+    """Attacker-measured leakage: paper physics, learned information values.
+
+    ``depths``/``scores`` hold the trained reconstruction adversary's
+    attack accuracy (variance-explained in [0, 1]) at normalized cut
+    depths; :meth:`layer_values` interpolates them onto any profile's
+    layer axis, so a model measured on a depth-8 transformer prices a
+    35-layer ResNet profile's cut points by relative depth. When
+    ``score_fn`` is set (see ``repro.attack.make_activation_scorer``) and
+    ``evaluate`` receives live smashed activations, the hop values come
+    from scoring THOSE activations with the trained decoder instead of
+    the interpolated table.
+    """
+
+    depths: Optional[np.ndarray] = None  # (K,) normalized cut depths in (0, 1)
+    scores: Optional[np.ndarray] = None  # (K,) measured attack accuracy
+    score_fn: Optional[Callable] = None  # activations dict -> (H,) scores
+
+    @classmethod
+    def from_scores(cls, cuts, scores, num_layers_measured: int,
+                    num_layers: Optional[int] = None,
+                    score_fn: Optional[Callable] = None) -> "EmpiricalLeakage":
+        """Build from per-cut attack accuracies measured on an
+        ``num_layers_measured``-layer model; ``num_layers`` sizes the
+        ``value_table`` used by :meth:`evaluate` (defaults to the
+        measured depth)."""
+        depths = np.asarray(cuts, np.float64) / float(num_layers_measured)
+        scores = np.asarray(scores, np.float64)
+        order = np.argsort(depths)
+        depths, scores = depths[order], scores[order]
+        ell = num_layers_measured if num_layers is None else num_layers
+        table = np.interp((np.arange(ell) + 1.0) / ell, depths, scores)
+        return cls(value_table=table.astype(np.float32), depths=depths,
+                   scores=scores, score_fn=score_fn)
+
+    def layer_values(self, leak_norm: np.ndarray) -> np.ndarray:
+        if self.depths is None or self.scores is None:
+            raise ValueError("EmpiricalLeakage needs measured depths/scores "
+                             "- build it via from_scores()")
+        ell = len(leak_norm)
+        vals = np.interp((np.arange(ell) + 1.0) / ell, self.depths, self.scores)
+        return vals.astype(np.float32)
+
+    def _hop_values(self, plan: HopGeometry, activations) -> Array:
+        if activations is not None and self.score_fn is not None:
+            return self.score_fn(activations)  # (H,) live attacker scores
+        return super()._hop_values(plan, activations)
+
+
+# module-level default used by the thin wrappers and env's fallback
+_ANALYTIC = AnalyticLeakage()
+
+
+def plan_hop_geometry(boundaries, devices, dev_pos, eav_pos, p_tx,
+                      decoy_p) -> HopGeometry:
+    """HopGeometry for the forward hops of one concrete split plan.
+
+    ``boundaries``/``devices`` are the (S,) plan arrays (cumulative layer
+    counts / device per stage), ``dev_pos`` (U+1, 2) and ``eav_pos``
+    (E, 2) the positions, ``p_tx`` scalar or (S-1,) trainer powers and
+    ``decoy_p`` (D,) or (S-1, D) decoy powers (decoy interference priced
+    at the eavesdropper, matching ``env.step``).
+    """
+    b = jnp.asarray(boundaries, jnp.int32)
+    dv = jnp.asarray(devices, jnp.int32)
+    h = b.shape[0] - 1
+    tx_pos = jnp.asarray(dev_pos)[dv[:-1]]  # (H, 2) transmitting stage
+    dist_tx_e = jnp.linalg.norm(
+        jnp.asarray(eav_pos)[None, :, :] - tx_pos[:, None, :], axis=-1)
+    dde = jnp.linalg.norm(
+        jnp.asarray(dev_pos)[:, None, :] - jnp.asarray(eav_pos)[None, :, :],
+        axis=-1)  # (D, E)
+    decoy_dist_e = jnp.broadcast_to(dde[None], (h,) + dde.shape)
+    p_tx = jnp.broadcast_to(jnp.asarray(p_tx, jnp.float32), (h,))
+    decoy_p = jnp.asarray(decoy_p, jnp.float32)
+    if decoy_p.ndim == 1:
+        decoy_p = jnp.broadcast_to(decoy_p[None], (h, decoy_p.shape[0]))
+    boundary_layer = jnp.maximum(b[:-1] - 1, 0)
+    return HopGeometry(p_tx=p_tx, dist_tx_e=dist_tx_e, decoy_p=decoy_p,
+                       decoy_dist_e=decoy_dist_e, boundary_layer=boundary_layer)
+
+
+def evaluate_leakage(model: LeakageModel, scenario, plan: HopGeometry,
+                     activations=None, key=None) -> Array:
+    """Functional entry point of the protocol: per-hop leakage (H,)."""
+    return model.evaluate(scenario, plan, activations=activations, key=key)
+
+
+# ---------------------------------------------------------------------------
+# legacy free functions - thin wrappers over AnalyticLeakage
+# ---------------------------------------------------------------------------
+
+
+def capture_probability(p_tx, dist_tx_e, decoy_p, decoy_dist_e,
+                        o: float = 1.0) -> Array:
+    """Theorem 1 product term, per eavesdropper. Returns (E,).
+
+    Deprecation note: retained as a bit-identical thin wrapper over
+    :meth:`AnalyticLeakage.capture_probability`; new code should hold a
+    :class:`LeakageModel` and call the method (or ``evaluate``).
+    """
+    return _ANALYTIC.capture_probability(p_tx, dist_tx_e, decoy_p,
+                                         decoy_dist_e, o)
+
+
+def expected_leakage(p_tx, dist_tx_e, decoy_p, decoy_dist_e, q_e, delta,
+                     o: float = 1.0) -> Array:
+    """Eq. 30: E[I] for one hop.
+
+    Deprecation note: retained as a bit-identical thin wrapper over
+    :meth:`AnalyticLeakage.expected_leakage`; prefer the
+    :class:`LeakageModel` protocol.
+    """
+    return _ANALYTIC.expected_leakage(p_tx, dist_tx_e, decoy_p, decoy_dist_e,
+                                      q_e, delta, o)
+
+
+def sample_leakage(key, p_tx, dist_tx_e, decoy_p, decoy_dist_e, q_e, delta,
+                   o=1.0) -> Array:
+    """Monte-Carlo single-draw leakage (Eqs. 12-13, 20-21).
+
+    Deprecation note: retained as a bit-identical thin wrapper over
+    :meth:`AnalyticLeakage.sample_leakage` (including the
+    per-eavesdropper-index key folding that makes padded-E sweeps exact);
+    prefer the :class:`LeakageModel` protocol.
+    """
+    return _ANALYTIC.sample_leakage(key, p_tx, dist_tx_e, decoy_p,
+                                    decoy_dist_e, q_e, delta, o)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ per scenario in lockstep on device.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence
@@ -246,7 +247,8 @@ def make_population_rollout(env, policy, hist_len: int, *,
 
 
 def make_population_evaluator(env, policy, hist_len: int = 1, *,
-                              share_params: bool = True):
+                              share_params: bool = True,
+                              leakage_model=None):
     """One compiled eval step for a whole scenario sweep.
 
     Returns ``evaluate(params, rkeys, akeys, scenarios)`` ->
@@ -254,8 +256,15 @@ def make_population_evaluator(env, policy, hist_len: int = 1, *,
     over the episode batch of per-episode sums. A 5-point
     ``monitor_prob`` grid (or any other parameter grid of the same
     shapes) compiles this exactly once.
+
+    ``leakage_model`` overrides the env's :class:`~repro.core.leakage.
+    LeakageModel` for this evaluation (e.g. score an analytically
+    trained agent under attacker-measured EmpiricalLeakage values).
     """
     from repro.core.agents import rollout as R
+
+    if leakage_model is not None:
+        env = dataclasses.replace(env, leakage_model=leakage_model)
 
     one = R.make_episode_rollout(env, policy, hist_len)
     trace_count = [0]
@@ -287,16 +296,18 @@ def make_population_evaluator(env, policy, hist_len: int = 1, *,
 
 def evaluate_population(env, policy, params, scenarios, *,
                         episodes: int = 20, seed: int = 1000,
-                        hist_len: int = 1, share_params: bool = True
-                        ) -> Dict[str, np.ndarray]:
+                        hist_len: int = 1, share_params: bool = True,
+                        leakage_model=None) -> Dict[str, np.ndarray]:
     """Evaluate ``params`` across a stacked scenario batch in ONE jitted
     call (fresh geometry per episode, same episode keys per scenario).
 
     Key derivation mirrors ``loops.evaluate_sac`` so a batch-of-1 sweep
-    reproduces the single-scenario evaluation numbers.
+    reproduces the single-scenario evaluation numbers. ``leakage_model``
+    swaps the leakage pricing for this evaluation (analytic default).
     """
     ev = make_population_evaluator(env, policy, hist_len,
-                                   share_params=share_params)
+                                   share_params=share_params,
+                                   leakage_model=leakage_model)
     key = jax.random.PRNGKey(seed)
     k_reset, k_act = jax.random.split(key)
     out = ev(params, jax.random.split(k_reset, episodes),

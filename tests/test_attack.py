@@ -1,0 +1,145 @@
+"""The FSHA-style attacker: fused chunk, population vmap, capture gating.
+
+Mirrors the rollout-engine test contract: the vmapped population is
+bit-identical to the single-attacker loop at population size 1, the
+whole (boundary x scenario) population compiles exactly ONCE, training
+actually reduces the reconstruction loss, and zero capture probability
+makes the captured client pool's CONTENTS irrelevant bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.attack import (
+    AttackConfig,
+    attack_scores,
+    flatten_rows,
+    init_attack_state,
+    init_attacker,
+    init_attacker_population,
+    make_attack_chunk,
+    make_population_attack_chunk,
+    smashed_activations,
+    tiny_attack_model_cfg,
+)
+
+CFG = AttackConfig(d_data=6, d_smash=6, feat_dim=8, hidden=8, batch=16)
+POOL = 48
+STEPS = 12
+
+
+def _pools(key, n=None):
+    ks = jax.random.split(key, 4)
+    shape = (POOL,) if n is None else (n, POOL)
+    mk = lambda k, d: jax.random.normal(k, shape + (d,))
+    return {
+        "z_cli": mk(ks[0], CFG.d_smash),
+        "x_cli": mk(ks[1], CFG.d_data),
+        "z_aux": mk(ks[2], CFG.d_smash),
+        "x_aux": mk(ks[3], CFG.d_data),
+    }
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_population_of_one_matches_single_chunk_bitwise():
+    key = jax.random.PRNGKey(0)
+    k_init, k_pool, k_run = jax.random.split(key, 3)
+    params = init_attacker(k_init, CFG)
+    opt_state = init_attack_state(params, CFG)
+    pools = _pools(k_pool)
+    p_eff = jnp.asarray(0.7)
+
+    single = make_attack_chunk(CFG, STEPS)
+    p1, s1, m1 = single(params, opt_state, pools, p_eff, k_run)
+
+    pop = make_population_attack_chunk(CFG, STEPS)
+    stack = lambda t: jax.tree.map(lambda a: a[None], t)
+    p2, s2, m2 = pop(stack(params), stack(opt_state), stack(pools),
+                     p_eff[None], k_run[None])
+    assert _leaves_equal(p1, jax.tree.map(lambda a: a[0], p2))
+    assert _leaves_equal(s1, jax.tree.map(lambda a: a[0], s2))
+    assert _leaves_equal(m1, jax.tree.map(lambda a: a[0], m2))
+
+
+def test_population_compiles_once_across_boundaries_and_scenarios():
+    """One trace serves every (boundary x scenario) batch of the same
+    shape - new pools, new capture weights, new keys, zero recompiles."""
+    n = 6  # e.g. 3 boundaries x 2 scenarios
+    pop = make_population_attack_chunk(CFG, STEPS)
+    params, opt_state = init_attacker_population(jax.random.PRNGKey(1), CFG, n)
+    for i in range(3):  # three different boundary/scenario batches
+        pools = _pools(jax.random.PRNGKey(10 + i), n)
+        p_eff = jax.random.uniform(jax.random.PRNGKey(20 + i), (n,))
+        keys = jax.random.split(jax.random.PRNGKey(30 + i), n)
+        params, opt_state, _ = pop(params, opt_state, pools, p_eff, keys)
+    assert pop.trace_count == [1]
+
+
+def test_training_reduces_reconstruction_loss():
+    key = jax.random.PRNGKey(2)
+    k_init, k_pool, k_run = jax.random.split(key, 3)
+    params = init_attacker(k_init, CFG)
+    opt_state = init_attack_state(params, CFG)
+    # learnable task: x is a fixed linear readout of z
+    pools = _pools(k_pool)
+    w = jax.random.normal(jax.random.PRNGKey(3), (CFG.d_smash, CFG.d_data))
+    pools["x_cli"] = pools["z_cli"] @ w
+    pools["x_aux"] = pools["z_aux"] @ w
+    chunk = make_attack_chunk(CFG, 150)
+    p, _, m = chunk(params, opt_state, pools, jnp.asarray(1.0), k_run)
+    mse = np.asarray(m["recon_mse"])
+    assert mse[-10:].mean() < 0.5 * mse[:10].mean()
+    sc, _ = attack_scores(p, pools["z_cli"], pools["x_cli"])
+    assert float(sc) > 0.3
+
+
+def test_zero_capture_ignores_client_pool_contents():
+    """p_eff=0: the captured pool's values must not influence training -
+    the client-data loss terms are gated to exactly zero."""
+    key = jax.random.PRNGKey(4)
+    k_init, k_pool, k_run = jax.random.split(key, 3)
+    params = init_attacker(k_init, CFG)
+    opt_state = init_attack_state(params, CFG)
+    chunk = make_attack_chunk(CFG, STEPS)
+    pools_a = _pools(k_pool)
+    pools_b = dict(pools_a)
+    pools_b["z_cli"] = pools_a["z_cli"] * -3.0 + 1.0
+    pools_b["x_cli"] = pools_a["x_cli"] * 5.0 - 2.0
+    pa, _, _ = chunk(params, opt_state, pools_a, jnp.asarray(0.0), k_run)
+    pb, _, _ = chunk(params, opt_state, pools_b, jnp.asarray(0.0), k_run)
+    assert _leaves_equal(pa["atk"], pb["atk"])
+    # and with capture ON the same perturbation must matter
+    pc, _, _ = chunk(params, opt_state, pools_a, jnp.asarray(1.0), k_run)
+    pd, _, _ = chunk(params, opt_state, pools_b, jnp.asarray(1.0), k_run)
+    assert not _leaves_equal(pc["atk"], pd["atk"])
+
+
+def test_smashed_activations_match_manual_block_loop():
+    from repro.models import init_params
+    from repro.models import model as M
+
+    cfg = tiny_attack_model_cfg(depth=3, d_model=32)
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0,
+                                cfg.vocab_size)
+    cuts = [1, 3]
+    x0, z = smashed_activations(params, cfg, tokens, cuts)
+    assert np.array_equal(np.asarray(x0), np.asarray(params["embed"][tokens]))
+    sig = M.signature(cfg)
+    x = x0
+    outs = []
+    for layer in range(cfg.num_layers):
+        blk = jax.tree.map(lambda a: a[layer], params["slots"][0])
+        x, _, _ = M.block_apply(blk, x, cfg, sig[0],
+                                positions=jnp.arange(tokens.shape[-1]))
+        outs.append(x)
+    for k, cut in enumerate(cuts):
+        # scan vs python loop: same math, different fusion -> tiny ulp noise
+        assert np.allclose(np.asarray(z[k]), np.asarray(outs[cut - 1]),
+                           atol=1e-5)
+    flat = flatten_rows(z)
+    assert flat.shape == (len(cuts), 2 * 8, cfg.d_model)

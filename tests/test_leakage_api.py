@@ -1,0 +1,157 @@
+"""The unified LeakageModel API: analytic bit-exactness + empirical wiring.
+
+The redesign moved the paper's closed-form leakage into
+``AnalyticLeakage`` methods and kept the module-level free functions as
+thin wrappers - these tests pin that refactor bit-exactly (wrapper vs
+method vs an inline re-derivation of the original formulas), check the
+env threads a custom model through reward/step, and exercise the
+``EmpiricalLeakage`` depth interpolation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import channel_gain
+from repro.core.env import MHSLEnv
+from repro.core.leakage import (
+    AnalyticLeakage,
+    EmpiricalLeakage,
+    LeakageModel,
+    capture_probability,
+    evaluate_leakage,
+    expected_leakage,
+    plan_hop_geometry,
+    sample_leakage,
+)
+from repro.core.profiles import profile_table, resnet101_profile
+
+
+def _geometry(seed=0, e=3, u=4):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    p_tx = jax.random.uniform(ks[0], (), minval=0.05, maxval=1.5)
+    d_e = jax.random.uniform(ks[1], (e,), minval=20.0, maxval=600.0)
+    dp = jax.random.uniform(ks[2], (u,), minval=0.0, maxval=1.0)
+    dde = jax.random.uniform(ks[3], (u, e), minval=20.0, maxval=600.0)
+    return p_tx, d_e, dp, dde
+
+
+def test_free_functions_are_bitwise_wrappers():
+    model = AnalyticLeakage()
+    p_tx, d_e, dp, dde = _geometry()
+    q = jnp.asarray([0.8, 0.3, 0.0])
+    delta = jnp.asarray(0.7)
+    key = jax.random.PRNGKey(7)
+    assert np.array_equal(
+        np.asarray(capture_probability(p_tx, d_e, dp, dde)),
+        np.asarray(model.capture_probability(p_tx, d_e, dp, dde)))
+    assert np.array_equal(
+        np.asarray(expected_leakage(p_tx, d_e, dp, dde, q, delta)),
+        np.asarray(model.expected_leakage(p_tx, d_e, dp, dde, q, delta)))
+    assert np.array_equal(
+        np.asarray(sample_leakage(key, p_tx, d_e, dp, dde, q, delta)),
+        np.asarray(model.sample_leakage(key, p_tx, d_e, dp, dde, q, delta)))
+
+
+def test_capture_probability_matches_inline_theorem1():
+    """Regression pin: the method body IS the pre-refactor formula."""
+    p_tx, d_e, dp, dde = _geometry(seed=3)
+    s_tx = p_tx * channel_gain(d_e, 1.0)
+    s_d = dp[:, None] * channel_gain(dde, 1.0)
+    frac = s_tx[None, :] / jnp.maximum(s_d + s_tx[None, :], 1e-30)
+    frac = jnp.where(dp[:, None] > 0, frac, 1.0)
+    expect = jnp.prod(frac, axis=0)
+    got = capture_probability(p_tx, d_e, dp, dde)
+    assert np.array_equal(np.asarray(expect), np.asarray(got))
+    q = jnp.asarray([0.5, 0.9, 0.1])
+    expect_leak = jnp.sum(expect * q) * 0.42
+    got_leak = expected_leakage(p_tx, d_e, dp, dde, q, jnp.asarray(0.42))
+    assert np.allclose(np.asarray(expect_leak), np.asarray(got_leak),
+                       rtol=0, atol=0)
+
+
+def test_env_default_model_is_explicit_analytic():
+    """leakage_model=None and leakage_model=AnalyticLeakage() are the
+    same env bit-for-bit (rewards, leak info, state)."""
+    prof = resnet101_profile(batch=1)
+    env0 = MHSLEnv(profile=prof)
+    env1 = MHSLEnv(profile=prof, leakage_model=AnalyticLeakage())
+    key = jax.random.PRNGKey(11)
+    s0, s1 = env0.reset(key), env1.reset(key)
+    k = jax.random.PRNGKey(5)
+    for _ in range(4):
+        k, ka, ks = jax.random.split(k, 3)
+        masks = env0.action_masks(s0)
+        ks_a = jax.random.split(ka, 5)
+        a = {
+            "u": jax.random.categorical(ks_a[0], jnp.where(masks["u"], 0.0, -1e9)),
+            "size": jax.random.categorical(ks_a[1], jnp.where(masks["size"], 0.0, -1e9)),
+            "decoys": (jax.random.uniform(ks_a[2], masks["decoys"].shape) < 0.5
+                       ).astype(jnp.int32) * masks["decoys"],
+            "p_tx": jax.random.randint(ks_a[3], (), 0, env0.num_power_levels),
+            "p_d": jax.random.randint(ks_a[4], (), 0, env0.num_power_levels),
+        }
+        s0, r0, d0, i0 = env0.step(s0, a, ks)
+        s1, r1, d1, i1 = env1.step(s1, a, ks)
+        assert np.array_equal(np.asarray(r0), np.asarray(r1))
+        assert np.array_equal(np.asarray(i0["leak"]), np.asarray(i1["leak"]))
+
+
+def test_evaluate_expected_matches_per_hop_loop():
+    prof = resnet101_profile(batch=1)
+    model = AnalyticLeakage.for_profile(prof)
+    assert isinstance(model, LeakageModel)
+    ell = len(profile_table(prof).leak_norm)
+    dev_pos = jnp.asarray([[100.0, 100.0], [250.0, 120.0], [400.0, 300.0]])
+    eav_pos = jnp.asarray([[200.0, 200.0], [380.0, 90.0]])
+    boundaries = jnp.asarray([ell // 3, 2 * ell // 3, ell])
+    devices = jnp.asarray([0, 1, 2])
+    decoy_p = jnp.asarray([0.0, 0.2, 0.1])
+    plan = plan_hop_geometry(boundaries, devices, dev_pos, eav_pos,
+                             p_tx=0.5, decoy_p=decoy_p)
+    env = MHSLEnv(profile=prof)
+    sc = env.scenario()
+    got = np.asarray(evaluate_leakage(model, sc, plan))
+    assert got.shape == (2,)
+    q_e = sc.monitor_prob * sc.eave_mask
+    table = np.asarray(profile_table(prof).leak_norm)
+    for h in range(2):
+        delta = table[int(plan.boundary_layer[h])] * float(sc.leak_scale)
+        expect = expected_leakage(plan.p_tx[h], plan.dist_tx_e[h],
+                                  plan.decoy_p[h], plan.decoy_dist_e[h],
+                                  q_e, delta, sc.rayleigh_o)
+        assert np.allclose(got[h], float(expect), rtol=1e-6)
+    # sampled path: per-hop fold_in keys over the same geometry
+    key = jax.random.PRNGKey(3)
+    samp = np.asarray(evaluate_leakage(model, sc, plan, key=key))
+    for h in range(2):
+        delta = table[int(plan.boundary_layer[h])] * float(sc.leak_scale)
+        expect = sample_leakage(jax.random.fold_in(key, h), plan.p_tx[h],
+                                plan.dist_tx_e[h], plan.decoy_p[h],
+                                plan.decoy_dist_e[h], q_e, delta,
+                                sc.rayleigh_o)
+        assert np.array_equal(samp[h], np.asarray(expect))
+
+
+def test_empirical_interpolation_and_env_threading():
+    emp = EmpiricalLeakage.from_scores([1, 2, 4], [0.6, 0.3, 0.1], 4)
+    assert isinstance(emp, LeakageModel)
+    # measured depths hit their own scores exactly
+    tab = np.asarray(emp.value_table)
+    assert np.allclose(tab[[0, 1, 3]], [0.6, 0.3, 0.1])
+    # interpolated onto a deeper profile: bounded by the measured range,
+    # monotone for monotone scores
+    vals = emp.layer_values(np.zeros(16))
+    assert vals.shape == (16,)
+    assert vals.min() >= 0.1 - 1e-6 and vals.max() <= 0.6 + 1e-6
+    assert np.all(np.diff(vals) <= 1e-6)
+    # env threads the table through its reward constants
+    prof = resnet101_profile(batch=1)
+    env = MHSLEnv(profile=prof, leakage_model=emp)
+    ell = len(profile_table(prof).leak_norm)
+    assert np.allclose(np.asarray(env._consts()[2]), emp.layer_values(
+        profile_table(prof).leak_norm), atol=1e-7)
+    assert dataclasses.fields(env)  # still a dataclass after the new field
+    assert ell >= 16  # deeper than the measured depth: interpolation ran
