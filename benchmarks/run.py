@@ -32,7 +32,30 @@ ALL = [
     "throughput",
     "pipeline",
     "serving",
+    "moe_dispatch",
+    "zoo_plan_scoring",
 ]
+
+
+def select(names, only: str):
+    """Resolve a ``--only`` spec against the benchmark list.
+
+    A spec entry matches a benchmark on its EXACT name or as an explicit
+    underscore-delimited prefix (``fig10`` -> ``fig10_leakage_attack``).
+    Bare ``startswith`` matching would make ``--only fig1`` silently run
+    ``fig10_leakage_attack``; an entry that matches nothing is an error
+    rather than a silent no-op.
+    """
+    picked = []
+    for o in only.split(","):
+        o = o.strip()
+        if not o:
+            continue
+        hits = [n for n in names if n == o or n.startswith(o + "_")]
+        if not hits:
+            raise SystemExit(f"--only: {o!r} matches no benchmark in {names}")
+        picked.extend(h for h in hits if h not in picked)
+    return [n for n in names if n in picked]
 
 
 def main(argv=None) -> None:
@@ -56,9 +79,7 @@ def main(argv=None) -> None:
         print(f"# jit cache: {cache_dir}", flush=True)
     bench = BenchConfig(quick=not args.full, smoke=args.smoke,
                         leakage=args.leakage)
-    names = ALL if not args.only else [
-        n for n in ALL if any(n.startswith(o.strip()) for o in args.only.split(","))
-    ]
+    names = ALL if not args.only else select(ALL, args.only)
     print("name,us_per_call,derived")
     t_all = time.time()
     failures = []

@@ -1,0 +1,132 @@
+"""Architecture-aware split-plan scoring across the model zoo (PR 9).
+
+One measurement, ``zoo_plan_scoring``: for four heterogeneous zoo
+configs - pure attention (qwen2.5-3b), attention+MoE (qwen3-moe-30b),
+pure SSM (mamba2-370m), hybrid SSM/MoE (jamba-v0.1-52b) - score the FULL
+(L-1 choose S-1) cut-point enumeration through ``make_plan_scorer``
+under a nonzero ``NetworkConfig.state_cycles_per_bit`` (the
+architecture-aware pricing knob: attention KV, SSM scan state, and MoE
+resident expert banks all enter the Eq. 8-9 compute terms through
+``ProfileTable.state_cum``). Per config it records plans/sec and the
+scorer's compiled-trace count, which must be EXACTLY 1 - the whole
+enumeration runs as one jitted vmap per profile.
+
+To show the pricing actually differentiates block types (not just adds a
+constant), each config also records its best-plan boundaries with state
+pricing OFF (the homogeneous seed behaviour) and ON: configs whose
+blocks carry unequal resident state (MoE banks vs dense, KV vs SSM
+state) shift their optimal cuts, and the per-block-kind state histogram
+explains why.
+
+CI gate: >= 4 configs, each scored in exactly 1 compiled trace with the
+full enumeration. New baseline keys are recorded write-once into
+``BENCH_throughput.json`` (never in ``--smoke``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import (
+    BenchConfig, emit_csv_row, record_baseline, save_json,
+)
+
+ZOO = [
+    "qwen2.5-3b",       # pure attention
+    "qwen3-moe-30b-a3b",  # attention + MoE expert banks
+    "mamba2-370m",      # pure SSM
+    "jamba-v0.1-52b",   # hybrid SSM/attention + MoE
+]
+
+# resident-state maintenance cycles per bit: visible against the Eq. 8
+# FLOP term at paper scale without drowning it
+STATE_CYCLES_PER_BIT = 0.01
+
+
+def _score_zoo(bench: BenchConfig, seed: int):
+    import jax
+    from repro.configs import get_config
+    from repro.core.channel import NetworkConfig
+    from repro.core.profiles import (
+        KIND_NAMES, profile_table, transformer_profile,
+    )
+    from repro.core.splitting import make_plan_scorer, stack_boundaries
+
+    s = 3 if bench.smoke else 4
+    rng = np.random.default_rng(seed)
+    net0 = NetworkConfig(max_split=s)
+    net1 = replace(net0, state_cycles_per_bit=STATE_CYCLES_PER_BIT)
+    u = net0.num_devices
+    pos = rng.uniform(0, net0.area_m, (u + 1, 2))
+    devices = np.concatenate([np.arange(s - 1), [u]]).astype(np.int32)
+    p_tx = np.full((s - 1,), 0.5)
+    decoy = np.zeros((s - 1, u + 1))
+    decoy[:, s] = 0.2
+
+    configs = []
+    for name in ZOO:
+        cfg = get_config(name)
+        prof = transformer_profile(cfg, batch=1, seq=2048)
+        tab = profile_table(prof)
+        bounds = stack_boundaries(cfg.num_layers, s)  # FULL enumeration
+
+        scorer = make_plan_scorer(prof)
+        t, e = scorer(bounds, devices, pos, p_tx, decoy, net1)  # compile
+        jax.block_until_ready(e)
+        t0 = time.perf_counter()
+        t, e = scorer(bounds, devices, pos, p_tx, decoy, net1)
+        jax.block_until_ready(e)
+        dt = time.perf_counter() - t0
+
+        # best plan with pricing OFF (homogeneous seed behaviour) vs ON
+        t0_, _ = scorer(bounds, devices, pos, p_tx, decoy, net0)
+        best_off = bounds[int(np.argmin(np.asarray(t0_)))]
+        best_on = bounds[int(np.argmin(np.asarray(t)))]
+
+        kinds = np.asarray(tab.kind)
+        state_by_kind = {
+            KIND_NAMES[kv]: float(np.asarray(tab.state_bits)[kinds == kv].sum())
+            for kv in sorted(set(int(k) for k in kinds))
+        }
+        configs.append({
+            "config": name, "layers": cfg.num_layers, "stages": s,
+            "plans": int(bounds.shape[0]), "score_s": dt,
+            "plans_per_sec": bounds.shape[0] / dt,
+            "traces": scorer.trace_count[0],
+            "best_boundaries_homogeneous": [int(b) for b in best_off],
+            "best_boundaries_state_priced": [int(b) for b in best_on],
+            "cut_moved": bool(np.any(best_off != best_on)),
+            "state_bits_by_kind": state_by_kind,
+        })
+    return {"state_cycles_per_bit": STATE_CYCLES_PER_BIT, "stages": s,
+            "configs": configs}
+
+
+def main(bench: BenchConfig = BenchConfig(), seed: int = 0,
+         force: bool = False):
+    res = _score_zoo(bench, seed)
+    for row in res["configs"]:
+        emit_csv_row(
+            f"zoo_plan_scoring/{row['config']}", 1e6 * row["score_s"],
+            f"plans={row['plans']} plans_per_sec={row['plans_per_sec']:.0f} "
+            f"traces={row['traces']} cut_moved={row['cut_moved']}")
+
+    payload = {"zoo_plan_scoring": res}
+    save_json("zoo_plan_scoring", payload)
+    if not bench.smoke:
+        record_baseline(payload, force=force)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true",
+                    help="re-record existing BENCH_throughput.json keys")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(BenchConfig(quick=not args.full), seed=args.seed, force=args.force)

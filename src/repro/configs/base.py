@@ -23,6 +23,11 @@ class MoEConfig:
     router_aux_weight: float = 1e-2
     # every `moe_every`-th block is MoE (1 = every block); used by hybrids
     moe_every: int = 1
+    # token routing: "dropless" (sort-based grouping, every routed token
+    # computed - layers.moe_apply_dropless) or "capacity" (the classic
+    # ceil(T*k*cf/E) buffer with token dropping - layers.moe_apply).
+    # capacity_factor only matters under "capacity".
+    dispatch: str = "dropless"
 
     @property
     def enabled(self) -> bool:

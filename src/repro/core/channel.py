@@ -57,6 +57,13 @@ class NetworkConfig:
     lambda_f: float = 1.5e9  # lambda_f FLOPs-scale coefficient (Table I)
     lambda_b: float = 1.5e9  # lambda_b
     theta_chip: float = 1e-28  # vartheta_k energy coefficient
+    # architecture-aware state pricing: maintenance cycles per RESIDENT
+    # state bit per iteration (attention KV, SSM scan state, MoE expert
+    # weights - ProfileTable.state_bits). Folded into the Eq. 8-9 compute
+    # terms of plan_cost/score_plans, so cut points price differently
+    # across block types. 0.0 (default) reproduces the homogeneous
+    # residual-MLP pricing exactly.
+    state_cycles_per_bit: float = 0.0
     power_levels: tuple = (0.1, 0.2, 0.5, 1.0)  # discrete transmit powers (W)
     max_split: int = 4  # S (number of sub-models incl. server)
 
@@ -146,6 +153,23 @@ def compute_time_bwd(bwd_flops: Array, net: NetworkConfig, lam: float = 1.0) -> 
 def compute_energy(flops: Array, net: NetworkConfig) -> Array:
     """First term of Eq. 11: vartheta * f^2 * cycles (cycles = FLOPs/IPC)."""
     return net.theta_chip * net.f_cpu_hz**2 * (flops / IPC)
+
+
+def state_time(state_bits: Array, net: NetworkConfig) -> Array:
+    """Per-DIRECTION cost of a stage's resident state (KV cache, SSM scan
+    state, MoE expert weights): ``state_cycles_per_bit`` maintenance
+    cycles per bit over the CPU clock. Plan costs add it to BOTH the
+    Eq. 8 forward and Eq. 9 backward stage times (state is touched each
+    direction)."""
+    return net.state_cycles_per_bit * state_bits / net.f_cpu_hz
+
+
+def state_energy(state_bits: Array, net: NetworkConfig) -> Array:
+    """Eq. 11 energy of one direction's state-maintenance cycles
+    (matching :func:`state_time`; plan costs charge it twice per
+    iteration)."""
+    return net.theta_chip * net.f_cpu_hz**2 * (
+        net.state_cycles_per_bit * state_bits)
 
 
 def sample_positions(key, num_devices: int, num_eaves: int, area_m):

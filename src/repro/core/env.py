@@ -44,6 +44,8 @@ from repro.core.channel import (
     compute_time_fwd,
     data_rate,
     sample_positions,
+    state_energy,
+    state_time,
     tx_time,
 )
 from repro.core.leakage import AnalyticLeakage, LeakageModel
@@ -192,6 +194,7 @@ class MHSLEnv:
             jnp.asarray(self._leakage().layer_values(t.leak_norm)),
             jnp.asarray(t.fwd_cum),
             jnp.asarray(t.bwd_cum),
+            jnp.asarray(t.state_cum),
         )
 
     # ---- reset ---------------------------------------------------------------
@@ -294,7 +297,7 @@ class MHSLEnv:
              params: Optional[ScenarioParams] = None,
              ) -> Tuple[EnvState, Array, Array, Dict]:
         sp = self._params(params)
-        act_bits, grad_bits, leak_v, fwd_cum, bwd_cum = self._consts()
+        act_bits, grad_bits, leak_v, fwd_cum, bwd_cum, state_cum = self._consts()
         powers = sp.power_levels
         n = state.n
         S, U, L = self.S, self.U, self.L
@@ -375,15 +378,21 @@ class MHSLEnv:
         stage_fwd_flops = fwd_cum[hi] - fwd_cum[lo]
         stage_bwd_flops = bwd_cum[hi] - bwd_cum[lo]
         stage_flops = jnp.where(fwd_hop, stage_fwd_flops, stage_bwd_flops)
+        # resident-state maintenance (KV / SSM state / MoE expert bank) is
+        # charged once per direction, matching plan_cost's per-iteration 2x
+        stage_state = state_cum[hi] - state_cum[lo]
         t_comp = jnp.where(
             fwd_hop,
             compute_time_fwd(stage_fwd_flops, sp, lam=sp.lambda_f),
             compute_time_bwd(stage_bwd_flops, sp, lam=sp.lambda_b),
-        )
+        ) + state_time(stage_state, sp)
         t_comp = jnp.where(has_hop, t_comp, 0.0)
         # energy (Eq. 11) charges the same direction-dependent FLOPs the
         # delay model does: fwd table on forward hops, bwd table on backward
-        e_comp = jnp.where(has_hop, compute_energy(stage_flops, sp), 0.0)
+        e_comp = jnp.where(
+            has_hop,
+            compute_energy(stage_flops, sp) + state_energy(stage_state, sp),
+            0.0)
         e_hop = (p_tx + decoy_p.sum()) * t_hop + e_comp
 
         # ---- 3) leakage (Eqs. 12-13, 20-21) ----------------------------------

@@ -58,8 +58,18 @@ with zeroed projections are exact identities, so the pipeline computes the
 same function while exposing the real cost of imbalance - exactly the
 trade-off the paper's Eq. 10 penalizes.
 
-Restriction: architectures with layer-group period 1 (all but Jamba, whose
-period is 8; noted in DESIGN.md SArch-applicability).
+Mixed block types (the model-zoo case: Jamba's A/M hybrid period, MoE
+every-k layers) run through the 1F1B schedule via a UNION param layout:
+every layer row carries every field any signature in the layer-group
+period uses (attn, mamba, mlp, moe), zero-filled where foreign, and a
+STATIC per-slot block-kind schedule (one int8 code per layer, restacked
+per stage like the params) drives a ``lax.switch`` inside the stage scan
+- one branch per distinct signature, each reading only its own fields,
+so the foreign zero rows get exact-zero gradients. Homogeneous
+(period-1) architectures keep the original single-signature fast path
+with no switch and no union padding; the fill-drain reference remains
+period-1 only (mixed parity is pinned against the plain ``M.forward``
+loss instead, see tests/test_pipeline_schedule.py).
 """
 from __future__ import annotations
 
@@ -222,6 +232,95 @@ def unstack_stage_grads(stage_grads, boundaries: Sequence[int]):
     return jax.tree.map(one, stage_grads)
 
 
+def unique_signatures(cfg: ModelConfig):
+    """Distinct per-layer signatures + per-layer branch codes.
+
+    Returns ``(sig, uniq, codes)``: the full per-layer signature tuple,
+    the distinct signatures in first-appearance order (the ``lax.switch``
+    branch order of the mixed-block executor), and an ``(L,)`` int32
+    array mapping each layer to its branch index. All host constants -
+    the block-type schedule is STATIC per split plan.
+    """
+    sig = M.signature(cfg)
+    uniq = []
+    for s in sig:
+        if s not in uniq:
+            uniq.append(s)
+    codes = np.asarray([uniq.index(s) for s in sig], np.int32)
+    return sig, tuple(uniq), codes
+
+
+def _sig_field_keys(cfg: ModelConfig, slot_sig) -> Tuple[str, ...]:
+    """Top-level param fields a signature's block reads (host constant)."""
+    shapes = jax.eval_shape(
+        lambda k: M.init_block(k, cfg, slot_sig, jnp.float32),
+        jax.random.PRNGKey(0))
+    return tuple(shapes.keys())
+
+
+def union_layer_params(slots, num_layers: int):
+    """Per-period slot stacks -> ONE (L, ...) stack in a UNION field layout.
+
+    ``slots`` is ``params["slots"]``: a ``period``-tuple of trees whose
+    leading dim is ``L / period`` (layer ``i`` lives in slot ``i % period``
+    at row ``i // period``). The union row for a layer carries every
+    top-level field any slot in the period uses; fields foreign to the
+    layer's own signature are zero-filled and never read by its
+    ``lax.switch`` branch (their gradients come back as exact zeros, see
+    :func:`split_union_grads`). Field shapes agree across slots because
+    every block of a config shares one ``ModelConfig``.
+    """
+    period = len(slots)
+    fields = {}
+    for slot in slots:
+        for k, v in slot.items():
+            fields.setdefault(k, jax.tree.map(
+                lambda a: jnp.zeros((num_layers,) + a.shape[1:], a.dtype), v))
+    out = {}
+    for k, base in fields.items():
+        for j, slot in enumerate(slots):
+            if k in slot:
+                # static-stride scatter: slot j owns layers j, j+p, j+2p, ...
+                base = jax.tree.map(
+                    lambda b, sv: b.at[j::period].set(sv), base, slot[k])
+        out[k] = base
+    return out
+
+
+def split_union_grads(union_grads, slots):
+    """(L, ...) union-layout grads -> the ``params["slots"]`` structure.
+
+    Inverse of :func:`union_layer_params`: slot ``j`` takes the static
+    strided rows ``[j::period]`` of exactly its own fields; the union's
+    foreign-field rows (exact zeros - no switch branch reads them) are
+    dropped.
+    """
+    period = len(slots)
+    out = []
+    for j, slot in enumerate(slots):
+        out.append({
+            k: jax.tree.map(lambda a: a[j::period], union_grads[k])
+            for k in slot
+        })
+    return tuple(out)
+
+
+def _stage_codes(layer_codes: np.ndarray, boundaries: Sequence[int]):
+    """(L,) per-layer branch codes -> (S, max_len) per-stage schedule.
+
+    Same layout as :func:`restack_for_stages`; padding slots get code 0
+    but are masked by the stage's active length before dispatch.
+    """
+    lens = stage_lengths(boundaries)
+    s, max_len = len(lens), max(lens)
+    out = np.zeros((s, max_len), np.int32)
+    lo = 0
+    for k, b in enumerate(boundaries):
+        out[k, : b - lo] = layer_codes[lo:b]
+        lo = b
+    return jnp.asarray(out)
+
+
 def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                      n_microbatches: int, stage_axis: str = "stage",
                      pipe: Optional[PipelineConfig] = None,
@@ -241,7 +340,9 @@ def pipeline_loss_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     """
     sig = M.signature(cfg)
     period = M.find_period(sig)
-    assert period == 1, f"pipeline executor needs period-1 archs, got {period}"
+    assert period == 1, (
+        f"fill-drain reference needs period-1 archs, got {period}; "
+        "mixed block types run through the 1f1b schedule")
     slot_sig = sig[0]
     s_stages = len(boundaries)
     max_len = max(stage_lengths(boundaries))
@@ -380,10 +481,11 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
         return fd_step
     assert pipe.schedule == "1f1b", pipe.schedule
 
-    sig = M.signature(cfg)
+    sig, uniq_sigs, layer_codes = unique_signatures(cfg)
     period = M.find_period(sig)
-    assert period == 1, f"pipeline executor needs period-1 archs, got {period}"
+    mixed = period > 1
     slot_sig = sig[0]
+    uniq_keys = [_sig_field_keys(cfg, u) for u in uniq_sigs]
     s_stages = len(boundaries)
     lens = stage_lengths(boundaries)
     max_len = max(lens)
@@ -396,7 +498,12 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     env_size = int(mesh.shape[env_axis]) if env_axis is not None else 1
 
     def fn(params, tokens, labels):
-        stage_blocks = restack_for_stages(params["slots"][0], boundaries)
+        if mixed:
+            layer_stack = union_layer_params(params["slots"], cfg.num_layers)
+        else:
+            layer_stack = params["slots"][0]
+        stage_blocks = restack_for_stages(layer_stack, boundaries)
+        codes_st = _stage_codes(layer_codes, boundaries)  # (S, max_len)
         lens_arr = jnp.asarray(lens, jnp.int32)
         m_total, t_len = tokens.shape
         mb = m_total // m_micro
@@ -407,9 +514,10 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
         lab_mb = labels.reshape(m_micro, mb, t_len)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
 
-        def per_stage(stage_blocks, lens_arr, tok_mb, lab_mb, embed,
+        def per_stage(stage_blocks, codes_st, lens_arr, tok_mb, lab_mb, embed,
                       final_norm, head):
             stage_blocks = jax.tree.map(lambda a: a[0], stage_blocks)
+            codes = codes_st[0]  # (max_len,) this stage's block-kind schedule
             mb = tok_mb.shape[1]  # LOCAL rows (sharded over env_axis)
             active_len = lens_arr[0]
             sidx = jax.lax.axis_index(stage_axis)
@@ -417,24 +525,46 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
             is_last = sidx == s_stages - 1
             positions = jnp.arange(t_len)
 
+            if mixed:
+                # one switch branch per distinct signature; each reads ONLY
+                # its own fields of the union row, so the foreign zero-filled
+                # fields transpose to exact-zero gradients (MoE router aux is
+                # dropped, matching the homogeneous path)
+                branches = []
+                for u, keys in zip(uniq_sigs, uniq_keys):
+                    def br(blk, xx, _u=u, _keys=keys):
+                        sub = {k: blk[k] for k in _keys}
+                        out, _, _ = M.block_apply(
+                            sub, xx, cfg, _u, positions=positions,
+                            cache=None, cache_index=None, impl=blk_impl,
+                        )
+                        return out
+                    branches.append(br)
+
+                def apply_block(blk, code, xx):
+                    return jax.lax.switch(code, branches, blk, xx)
+            else:
+                def apply_block(blk, code, xx):
+                    out, _, _ = M.block_apply(
+                        blk, xx, cfg, slot_sig, positions=positions,
+                        cache=None, cache_index=None, impl=blk_impl,
+                    )
+                    return out
+
             def stage_fwd(blocks, x):
                 # scan over the padded block stack; the cond masks compute
                 # down to the stage's ACTIVE length (padding blocks are
                 # exact identities, so skipping them is value-preserving)
-                def body(xc, blk_i):
-                    blk, i = blk_i
-
-                    def apply(xx):
-                        out, _, _ = M.block_apply(
-                            blk, xx, cfg, slot_sig, positions=positions,
-                            cache=None, cache_index=None, impl=blk_impl,
-                        )
-                        return out
-
-                    xc = jax.lax.cond(i < active_len, apply, lambda xx: xx, xc)
+                def body(xc, blk_code_i):
+                    blk, code, i = blk_code_i
+                    xc = jax.lax.cond(
+                        i < active_len,
+                        lambda xx: apply_block(blk, code, xx),
+                        lambda xx: xx, xc)
                     return xc, None
 
-                out, _ = jax.lax.scan(body, x, (blocks, jnp.arange(max_len)))
+                out, _ = jax.lax.scan(
+                    body, x, (blocks, codes, jnp.arange(max_len)))
                 return out
 
             def stage_loss(blocks, fnorm, hd, x, lab):
@@ -599,7 +729,8 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
             mesh=mesh,
             in_specs=(
                 jax.tree.map(lambda _: P(stage_axis), stage_blocks),
-                P(stage_axis), data_spec, data_spec, P(), P(), P(),
+                P(stage_axis), P(stage_axis), data_spec, data_spec,
+                P(), P(), P(),
             ),
             out_specs=(
                 P(),
@@ -607,11 +738,15 @@ def pipeline_step_fn(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
                 P(), P(), P(),
             ),
             check_rep=False,
-        )(stage_blocks, lens_arr, tok_mb, lab_mb, params["embed"],
+        )(stage_blocks, codes_st, lens_arr, tok_mb, lab_mb, params["embed"],
           params["final_norm"], head)
 
         grads = jax.tree.map(jnp.zeros_like, params)
-        grads["slots"] = (unstack_stage_grads(gstages, boundaries),)
+        union_grads = unstack_stage_grads(gstages, boundaries)
+        if mixed:
+            grads["slots"] = split_union_grads(union_grads, params["slots"])
+        else:
+            grads["slots"] = (union_grads,)
         grads["final_norm"] = gnorm
         if cfg.tie_embeddings:
             grads["embed"] = gembed + ghead.T
@@ -682,12 +817,21 @@ def pipeline_serve_fns(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
     collective sequence regardless of which slot is live - that is what
     keeps the engine step one compiled trace across arrivals/completions.
     """
-    sig = M.signature(cfg)
+    sig, uniq_sigs, layer_codes = unique_signatures(cfg)
     period = M.find_period(sig)
-    assert period == 1, f"pipeline serving needs period-1 archs, got {period}"
+    mixed = period > 1
     slot_sig = sig[0]
-    if slot_sig[0] != "A" or slot_sig[1]:
-        raise ValueError("pipeline serving: attention-only, non-MoE archs")
+    if any(kind != "A" for kind, _, _ in sig):
+        raise ValueError(
+            "pipeline serving: SSM/hybrid archs are unservable - padded "
+            "batched prefill relies on causal masking, which protects KV "
+            "attention but not recurrent scan state")
+    if any(is_moe for _, is_moe, _ in sig) and cfg.moe.dispatch != "dropless":
+        raise ValueError(
+            "pipeline serving: capacity-dropping MoE is unservable (padded "
+            "prefill rows steal expert capacity from real rows); set "
+            "moe.dispatch='dropless'")
+    uniq_keys = [_sig_field_keys(cfg, u) for u in uniq_sigs]
     s_stages = len(boundaries)
     lens = stage_lengths(boundaries)
     max_len = max(lens)
@@ -699,41 +843,68 @@ def pipeline_serve_fns(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
         """Token-ring forward: x (B, s, d) embedded input (live on stage 0).
 
         Returns (logits (B, s, V), caches). Runs under shard_map."""
-        stage_blocks = restack_for_stages(params["slots"][0], boundaries)
+        if mixed:
+            layer_stack = union_layer_params(params["slots"], cfg.num_layers)
+        else:
+            layer_stack = params["slots"][0]
+        stage_blocks = restack_for_stages(layer_stack, boundaries)
+        codes_st = _stage_codes(layer_codes, boundaries)
         lens_arr = jnp.asarray(lens, jnp.int32)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
 
-        def per_stage(stage_blocks, lens_arr, ck, cv, x, embed, final_norm,
-                      head):
+        def per_stage(stage_blocks, codes_st, lens_arr, ck, cv, x, embed,
+                      final_norm, head):
             stage_blocks = jax.tree.map(lambda a: a[0], stage_blocks)
+            codes = codes_st[0]
             ck, cv = ck[0], cv[0]  # (max_len, B, kv, KH, hd)
             active_len = lens_arr[0]
             sidx = jax.lax.axis_index(stage_axis)
+
+            if mixed:
+                # all signatures are kind "A" here (gated above), so every
+                # switch branch threads the same-shaped KV ring; dense vs
+                # MoE MLP halves differ per branch
+                branches = []
+                for u, keys in zip(uniq_sigs, uniq_keys):
+                    def br(blk, xi, ki, vi, _u=u, _keys=keys):
+                        sub = {k: blk[k] for k in _keys}
+                        out, nc, _ = M.block_apply(
+                            sub, xi, cfg, _u, positions=positions,
+                            cache={"k": ki, "v": vi},
+                            cache_index=cache_index, impl=blk_impl,
+                        )
+                        return out, nc["k"], nc["v"]
+                    branches.append(br)
+
+                def apply_block(blk, code, xi, ki, vi):
+                    return jax.lax.switch(code, branches, blk, xi, ki, vi)
+            else:
+                def apply_block(blk, code, xi, ki, vi):
+                    out, nc, _ = M.block_apply(
+                        blk, xi, cfg, slot_sig, positions=positions,
+                        cache={"k": ki, "v": vi},
+                        cache_index=cache_index, impl=blk_impl,
+                    )
+                    return out, nc["k"], nc["v"]
 
             def stage_apply(operand):
                 xx, ck, cv = operand
 
                 def body(carry, blk_cache_i):
                     xc, = carry
-                    blk, k_i, v_i, i = blk_cache_i
+                    blk, k_i, v_i, code, i = blk_cache_i
 
                     def apply(op):
                         xi, ki, vi = op
-                        out, nc, _ = M.block_apply(
-                            blk, xi, cfg, slot_sig, positions=positions,
-                            cache={"k": ki, "v": vi},
-                            cache_index=cache_index, impl=blk_impl,
-                        )
-                        return out, nc["k"], nc["v"]
+                        return apply_block(blk, code, xi, ki, vi)
 
                     xc, k_i, v_i = jax.lax.cond(
                         i < active_len, apply, lambda op: op, (xc, k_i, v_i))
                     return (xc,), (k_i, v_i)
 
                 (xx,), (nk, nv) = jax.lax.scan(
-                    body, (xx,), (blocks := stage_blocks, ck, cv,
+                    body, (xx,), (stage_blocks, ck, cv, codes,
                                   jnp.arange(max_len)))
-                del blocks
                 return xx, nk, nv
 
             for t in range(s_stages):
@@ -758,12 +929,12 @@ def pipeline_serve_fns(cfg: ModelConfig, mesh: Mesh, boundaries: Sequence[int],
             mesh=mesh,
             in_specs=(
                 jax.tree.map(lambda _: P(stage_axis), stage_blocks),
-                P(stage_axis), P(stage_axis), P(stage_axis),
+                P(stage_axis), P(stage_axis), P(stage_axis), P(stage_axis),
                 P(), P(), P(), P(),
             ),
             out_specs=(P(), P(stage_axis), P(stage_axis)),
             check_rep=False,
-        )(stage_blocks, lens_arr, caches["k"], caches["v"], x,
+        )(stage_blocks, codes_st, lens_arr, caches["k"], caches["v"], x,
           params["embed"], params["final_norm"], head)
         return logits, {"k": ck, "v": cv}
 

@@ -29,6 +29,22 @@ import numpy as np
 from repro.configs.base import ModelConfig
 
 
+# per-block kind codes (LayerProfile.kind / ProfileTable.kind): the mixer
+# in the low bit-space, +2 when the block's FFN half is an expert bank
+KIND_ATTN = 0       # attention mixer + dense MLP
+KIND_SSM = 1        # Mamba-2 (SSD) mixer
+KIND_ATTN_MOE = 2   # attention mixer + MoE expert bank
+KIND_SSM_MOE = 3    # SSM mixer + MoE expert bank
+KIND_NAMES = {KIND_ATTN: "attn", KIND_SSM: "ssm",
+              KIND_ATTN_MOE: "attn+moe", KIND_SSM_MOE: "ssm+moe"}
+
+
+def block_kind(cfg: ModelConfig, i: int) -> int:
+    """Kind code of block ``i`` of ``cfg`` (KIND_* constants)."""
+    base = KIND_SSM if cfg.pattern[i] == "M" else KIND_ATTN
+    return base + (2 if cfg.is_moe_block(i) else 0)
+
+
 @dataclass(frozen=True)
 class LayerProfile:
     name: str
@@ -41,6 +57,17 @@ class LayerProfile:
     # observing the traffic emitted by layer i. Earlier layers leak more
     # about raw data [20]; default: act_bytes * depth-decaying risk factor.
     leak_value: np.ndarray  # (L,)
+    # architecture-aware columns (None = homogeneous legacy profile, treated
+    # as all-zero state / all-KIND_ATTN):
+    #   state_bytes[i] - bytes of RESIDENT per-block state the hosting device
+    #     must keep live across the run: attention KV cache, SSM scan + conv
+    #     state, MoE expert + router weights. Priced per stage via
+    #     NetworkConfig.state_cycles_per_bit (maintenance cycles folded into
+    #     the Eq. 8-9 compute terms), so cut points land differently across
+    #     block types.
+    #   kind[i] - KIND_* code of block i (int8).
+    state_bytes: np.ndarray = None  # (L,)
+    kind: np.ndarray = None  # (L,) int8 KIND_* codes
 
     @property
     def num_layers(self) -> int:
@@ -69,6 +96,23 @@ class ProfileTable:
     leak_norm: np.ndarray  # (L,)   leak_value / max(leak_value)
     fwd_cum: np.ndarray  # (L+1,) cumulative fwd FLOPs, fwd_cum[0] = 0
     bwd_cum: np.ndarray  # (L+1,) cumulative bwd FLOPs
+    # architecture-aware columns (all-zero / all-KIND_ATTN for legacy
+    # profiles built without them, e.g. resnet101):
+    kind: np.ndarray  # (L,)   int8 KIND_* block codes
+    state_bits: np.ndarray  # (L,)   resident state bits of layer i
+    state_cum: np.ndarray  # (L+1,) cumulative state bits, state_cum[0] = 0
+
+
+def _state_kind(profile: LayerProfile):
+    """Normalized (state_bytes, kind) with the legacy-None defaults."""
+    L = profile.num_layers
+    state = profile.state_bytes
+    kind = profile.kind
+    if state is None:
+        state = np.zeros(L, dtype=np.float64)
+    if kind is None:
+        kind = np.zeros(L, dtype=np.int8)
+    return np.asarray(state, np.float64), np.asarray(kind, np.int8)
 
 
 def profile_digest(profile: LayerProfile) -> str:
@@ -78,14 +122,26 @@ def profile_digest(profile: LayerProfile) -> str:
     equal-content profiles (e.g. ``transformer_profile`` rebuilt per sweep
     point) share one entry - and one compiled scorer - instead of keying
     on object identity and silently recompiling per object. Hashing a few
-    hundred float64s is nanoseconds next to a jit trace.
+    hundred float64s is nanoseconds next to a jit trace. The new
+    state/kind columns hash in normalized form, so a legacy profile built
+    with ``state_bytes=None`` shares its entry with an explicit all-zero
+    one.
     """
     import hashlib
 
     h = hashlib.blake2b(profile.name.encode(), digest_size=16)
-    for field in ("param_bytes", "act_bytes", "grad_bytes", "fwd_flops",
-                  "bwd_flops", "leak_value"):
-        arr = np.ascontiguousarray(getattr(profile, field))
+    state, kind = _state_kind(profile)
+    for field, arr in (
+        ("param_bytes", profile.param_bytes),
+        ("act_bytes", profile.act_bytes),
+        ("grad_bytes", profile.grad_bytes),
+        ("fwd_flops", profile.fwd_flops),
+        ("bwd_flops", profile.bwd_flops),
+        ("leak_value", profile.leak_value),
+        ("state_bytes", state),
+        ("kind", kind),
+    ):
+        arr = np.ascontiguousarray(arr)
         h.update(str(arr.shape).encode())
         h.update(arr.tobytes())
     return h.hexdigest()
@@ -102,12 +158,17 @@ def profile_table(profile: LayerProfile) -> ProfileTable:
     hit = _TABLE_CACHE.get(key)
     if hit is not None:
         return hit
+    state, kind = _state_kind(profile)
+    state_bits = state * 8.0
     table = ProfileTable(
         act_bits=profile.act_bytes * 8.0,
         grad_bits=profile.grad_bytes * 8.0,
         leak_norm=profile.leak_value / profile.leak_value.max(),
         fwd_cum=np.concatenate([[0.0], np.cumsum(profile.fwd_flops)]),
         bwd_cum=np.concatenate([[0.0], np.cumsum(profile.bwd_flops)]),
+        kind=kind,
+        state_bits=state_bits,
+        state_cum=np.concatenate([[0.0], np.cumsum(state_bits)]),
     )
     _TABLE_CACHE[key] = table
     return table
@@ -145,6 +206,25 @@ def transformer_profile(
             fwd[i] += 2.0 * 2.0 * batch * seq * ctx * cfg.num_heads * cfg.head_dim * 0.5
     bwd = 2.0 * fwd
     leak = act * _leak_weights(L)
+    # per-block resident state: what the hosting device keeps live beyond
+    # the streaming activation - attention KV cache, SSM scan + conv state,
+    # and the full expert bank of MoE blocks (every expert's weights are
+    # resident even though only top_k are active per token)
+    state = np.zeros(L, dtype=np.float64)
+    kinds = np.zeros(L, dtype=np.int8)
+    for i, kind in enumerate(cfg.pattern):
+        kinds[i] = block_kind(cfg, i)
+        if kind == "A":
+            ctx = min(seq, cfg.attention_window or seq)
+            state[i] += (batch * ctx * 2 * cfg.num_kv_heads * cfg.head_dim
+                         * act_bytes_per_el)
+        else:
+            sc = cfg.ssm
+            nh = sc.num_heads(d)
+            state[i] += batch * nh * sc.head_dim * sc.d_state * 4
+            state[i] += batch * (sc.d_inner(d) + 2 * sc.d_state) * (sc.d_conv - 1) * 4
+        if cfg.is_moe_block(i):
+            state[i] += cfg.mlp_params(True) * bytes_per_param
     return LayerProfile(
         name=cfg.name,
         param_bytes=pb,
@@ -153,6 +233,8 @@ def transformer_profile(
         fwd_flops=fwd,
         bwd_flops=bwd,
         leak_value=leak,
+        state_bytes=state,
+        kind=kinds,
     )
 
 

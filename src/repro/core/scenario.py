@@ -72,6 +72,10 @@ class ScenarioParams(NamedTuple):
     # zeros) reproduce the uniform-link seed physics bit-exactly.
     hop_bandwidth_hz: Array  # (max_split - 1,)
     hop_latency_s: Array  # (max_split - 1,)
+    # architecture-aware state pricing (NetworkConfig.state_cycles_per_bit):
+    # maintenance cycles per resident state bit folded into the Eq. 8-9
+    # compute terms. 0.0 reproduces homogeneous residual-MLP pricing.
+    state_cycles_per_bit: Array  # ()
 
     @property
     def num_eaves(self) -> int:
@@ -122,6 +126,8 @@ def scenario_from_net(
         lambda_b=jnp.asarray(1.0, jnp.float32),
         hop_bandwidth_hz=jnp.asarray(net.hop_bandwidth_hz, jnp.float32),
         hop_latency_s=jnp.asarray(net.hop_latency_s, jnp.float32),
+        state_cycles_per_bit=jnp.asarray(net.state_cycles_per_bit,
+                                         jnp.float32),
     )
 
 

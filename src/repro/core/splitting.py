@@ -37,6 +37,8 @@ from repro.core.channel import (
     compute_time_bwd,
     compute_time_fwd,
     data_rate,
+    state_energy,
+    state_time,
     tx_time,
 )
 from repro.core.profiles import LayerProfile, profile_digest, profile_table
@@ -114,6 +116,7 @@ def plan_cost_parts(
     lo = np.concatenate([[0], b[:-1]])
     fwd = tab.fwd_cum[b] - tab.fwd_cum[lo]
     bwd = tab.bwd_cum[b] - tab.bwd_cum[lo]
+    state = tab.state_cum[b] - tab.state_cum[lo]
     act_bits = tab.act_bits[b[:-1] - 1]
     grad_bits = tab.grad_bits[b[:-1] - 1]
     hop_bw, hop_lat = _hop_link(net, s - 1)
@@ -122,9 +125,14 @@ def plan_cost_parts(
     t_comp_bwd = np.zeros(s)
     e_comp = 0.0
     for k in range(s):
-        t_comp_fwd[k] = float(compute_time_fwd(fwd[k], net))
-        t_comp_bwd[k] = float(compute_time_bwd(bwd[k], net))
+        # resident-state maintenance (KV / SSM state / MoE expert bank)
+        # folds INTO the stage compute terms, so the transport tick model
+        # and the Eq. 10 total stay in automatic agreement
+        t_state = float(state_time(state[k], net))
+        t_comp_fwd[k] = float(compute_time_fwd(fwd[k], net)) + t_state
+        t_comp_bwd[k] = float(compute_time_bwd(bwd[k], net)) + t_state
         e_comp += float(compute_energy(fwd[k] + bwd[k], net))
+        e_comp += 2.0 * float(state_energy(state[k], net))  # fwd + bwd touch
     t_hop_fwd = np.zeros(max(s - 1, 0))
     t_hop_bwd = np.zeros(max(s - 1, 0))
     e_tx = 0.0
@@ -216,23 +224,27 @@ def even_boundaries(num_layers: int, s: int) -> Tuple[int, ...]:
 def _score_one(consts, boundaries, devices, positions, p_tx, decoy, sp):
     """Eq. 10/11 cost of ONE plan, all-jnp (vmapped over the plan batch).
 
-    ``consts`` = (fwd_cum, bwd_cum, act_bits, grad_bits) device tables;
-    ``sp`` is a ScenarioParams pytree (lambda_f/lambda_b ride along, so a
-    complexity-coefficient sweep is also retrace-free; they default to the
+    ``consts`` = (fwd_cum, bwd_cum, act_bits, grad_bits, state_cum) device
+    tables; ``sp`` is a ScenarioParams pytree (lambda_f/lambda_b and
+    state_cycles_per_bit ride along, so complexity-coefficient and
+    state-pricing sweeps are also retrace-free; the lambdas default to the
     1.0 that :func:`plan_cost` applies).
     """
-    fwd_cum, bwd_cum, act_bits_t, grad_bits_t = consts
+    fwd_cum, bwd_cum, act_bits_t, grad_bits_t, state_cum = consts
     lo = jnp.concatenate([jnp.zeros((1,), boundaries.dtype), boundaries[:-1]])
     fwd = fwd_cum[boundaries] - fwd_cum[lo]
     bwd = bwd_cum[boundaries] - bwd_cum[lo]
+    state = state_cum[boundaries] - state_cum[lo]
     act_bits = act_bits_t[boundaries[:-1] - 1]
     grad_bits = grad_bits_t[boundaries[:-1] - 1]
 
     t_comp = (
         compute_time_fwd(fwd, sp, lam=sp.lambda_f)
         + compute_time_bwd(bwd, sp, lam=sp.lambda_b)
+        + 2.0 * state_time(state, sp)  # fwd + bwd touch, as in plan_cost
     ).sum()
-    e_comp = compute_energy(fwd + bwd, sp).sum()
+    e_comp = (compute_energy(fwd + bwd, sp)
+              + 2.0 * state_energy(state, sp)).sum()
 
     s = boundaries.shape[0]
     hop_bw = sp.hop_bandwidth_hz[: s - 1]
@@ -276,6 +288,7 @@ def make_plan_scorer(profile: LayerProfile):
         jnp.asarray(tab.bwd_cum),
         jnp.asarray(tab.act_bits),
         jnp.asarray(tab.grad_bits),
+        jnp.asarray(tab.state_cum),
     )
     trace_count = [0]
 

@@ -5,7 +5,9 @@ Python for correctness validation; on TPU pass ``interpret=False``.
 """
 from repro.kernels.ca_attention import ca_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_dispatch import grouped_moe_ffn
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.stage_block import stage_mlp_block
 
-__all__ = ["ca_attention", "flash_attention", "ssd_scan", "stage_mlp_block"]
+__all__ = ["ca_attention", "flash_attention", "grouped_moe_ffn", "ssd_scan",
+           "stage_mlp_block"]

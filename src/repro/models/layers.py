@@ -510,3 +510,143 @@ def moe_apply(params, x: Array, cfg: ModelConfig):
     p_e = jnp.mean(probs, axis=(0, 1))
     aux = e * jnp.sum(f_e * p_e) * m.router_aux_weight
     return y, aux
+
+
+def _moe_route(params, xt: Array, cfg: ModelConfig):
+    """Shared token routing for the dropless + dense-reference paths.
+
+    xt: (T, D) flattened tokens. Returns (gates (T, k) f32 renormalized,
+    expert_ids (T, k) int32, aux scalar). Identical code on both sides is
+    what makes the dropless-vs-dense parity BITWISE rather than approximate.
+    """
+    m = cfg.moe
+    e, k = m.num_experts, m.top_k
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    f_e = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e) * m.router_aux_weight
+    return gate_vals, expert_ids, aux
+
+
+def _moe_combine(out_choices: Array, gates: Array, dtype) -> Array:
+    """(T, k, D) per-choice expert outputs + (T, k) gates -> (T, D).
+
+    The k-summation runs through ONE einsum on both the dropless and the
+    dense-reference side, so the combine order is identical (a scatter-add
+    combine would not be)."""
+    return jnp.einsum("tkd,tk->td", out_choices, gates.astype(dtype))
+
+
+def moe_apply_dense(params, x: Array, cfg: ModelConfig):
+    """Dense per-expert reference: EVERY expert FFN over EVERY token.
+
+    x: (B, S, D) -> (y, aux). O(T * E) FFN rows - the bitwise ground truth
+    the dropless dispatch is parity-pinned against, never a production
+    path. Written as a python loop over experts so each expert's rows go
+    through a plain (T, D) @ (D, F) gemm.
+    """
+    b, s, d = x.shape
+    e = cfg.moe.num_experts
+    xt = x.reshape(b * s, d)
+    gates, ids, aux = _moe_route(params, xt, cfg)
+    swiglu = cfg.activation == "swiglu"
+    per_expert = []
+    for j in range(e):
+        wu = params["w_up"][j].astype(x.dtype)
+        wd = params["w_down"][j].astype(x.dtype)
+        if swiglu:
+            wg = params["w_gate"][j].astype(x.dtype)
+            g = jnp.einsum("td,df->tf", xt, wg,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            u = jnp.einsum("td,df->tf", xt, wu,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            h = jax.nn.silu(g) * u
+        else:
+            u = jnp.einsum("td,df->tf", xt, wu,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            h = activation_fn(cfg.activation)(u)
+        per_expert.append(
+            jnp.einsum("tf,fd->td", h, wd,
+                       preferred_element_type=jnp.float32).astype(x.dtype))
+    stacked = jnp.stack(per_expert)  # (E, T, D)
+    t = b * s
+    got = stacked[ids, jnp.arange(t)[:, None]]  # (T, k, D)
+    y = _moe_combine(got, gates, x.dtype)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_dropless(params, x: Array, cfg: ModelConfig, *,
+                       impl: str = "reference", block_size: int = 128,
+                       interpret=None):
+    """Dropless MoE dispatch: sort-based token grouping + grouped matmul.
+
+    Every routed (token, choice) is computed - no capacity buffer, no
+    token dropping, so the output of a token is independent of which
+    other tokens share its dispatch group (the structural defect behind
+    the old ``jamba_decode`` xfail: the capacity path drops differently
+    at prefill group size vs decode group size 1).
+
+    x: (B, S, D) -> (y, aux). Stable-argsort the (T*k) flat expert ids,
+    gather tokens into expert-contiguous rows, run the expert FFN
+    grouped, then gather back through the inverse permutation and combine
+    with one einsum (order-preserving, see ``_moe_combine``).
+
+    Both impls share one padded layout: per-expert regions padded up to
+    ``block_size`` rows (a STATIC ``T*k + E*(block_size-1)`` row bound,
+    so the whole dispatch jits with fixed shapes; padding rows are zero
+    and never gathered back). impl="reference" runs the jittable
+    ``kernels.moe_dispatch.grouped_ffn_reference`` batched einsum (the
+    production CPU path); impl="pallas" runs the fused
+    ``grouped_moe_ffn`` Pallas kernel over the same blocks. Both are
+    bitwise-identical to ``moe_apply_dense`` on CPU (pinned by
+    ``tests/test_moe_dropless.py``; ``lax.ragged_dot`` was rejected here
+    - its gemm blocking drifts ~2e-6 from the plain per-expert gemm).
+    """
+    from repro.kernels.moe_dispatch import (
+        grouped_ffn_reference, grouped_moe_ffn,
+    )
+
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    gates, ids, aux = _moe_route(params, xt, cfg)
+
+    flat = ids.reshape(-1)                      # (T*k,) token-major
+    order = jnp.argsort(flat)                   # stable: ties keep token order
+    sorted_eids = flat[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat].add(1)
+
+    blk = block_size
+    padded = ((counts + blk - 1) // blk) * blk              # (E,)
+    starts = jnp.cumsum(padded) - padded
+    excl = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(t * k) - excl[sorted_eids]
+    dest = starts[sorted_eids] + pos_in_expert              # unique rows
+    p_rows = -(-(t * k + e * (blk - 1)) // blk) * blk       # static bound
+    pbuf = jnp.zeros((p_rows, d), x.dtype).at[dest].set(xt[order // k])
+    block_eid = jnp.minimum(
+        jnp.searchsorted(jnp.cumsum(padded),
+                         jnp.arange(p_rows // blk) * blk, side="right"),
+        e - 1).astype(jnp.int32)
+
+    if impl == "reference":
+        out_p = grouped_ffn_reference(
+            pbuf, block_eid, params.get("w_gate"), params["w_up"],
+            params["w_down"], cfg.activation)
+    elif impl == "pallas":
+        out_p = grouped_moe_ffn(pbuf, block_eid, params,
+                                activation=cfg.activation,
+                                interpret=interpret)
+    else:
+        raise ValueError(f"unknown dropless impl {impl!r}")
+    out_sorted = out_p[dest]
+
+    inv = jnp.argsort(order)                    # flat choice -> sorted row
+    got = out_sorted[inv].reshape(t, k, d)
+    y = _moe_combine(got, gates, x.dtype)
+    return y.reshape(b, s, d), aux

@@ -116,6 +116,8 @@ def block_apply(
             h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
             if moe_a2a_enabled() and a2a_applicable(cfg):
                 y, aux = moe_apply_a2a(p["moe"], h2, cfg)
+            elif cfg.moe.dispatch == "dropless":
+                y, aux = L.moe_apply_dropless(p["moe"], h2, cfg)
             else:
                 y, aux = L.moe_apply(p["moe"], h2, cfg)
             x = x + y

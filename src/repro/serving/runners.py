@@ -12,11 +12,13 @@ jitted step:
   per slot at each slot's OWN position (slot-indexed KV writes, see
   ``models.layers._row_cache_update``).
 
-Both backends restrict to attention-only, period-1, non-MoE
-architectures: padded batched prefill relies on causal masking to keep
-pad garbage out of valid rows, which holds for KV caches but NOT for SSM
-recurrent state (pad tokens would pollute it) or capacity-bounded MoE
-routing (pad tokens would steal expert capacity).
+Both backends restrict to attention-only architectures (MoE allowed
+under DROPLESS dispatch): padded batched prefill relies on causal
+masking to keep pad garbage out of valid rows, which holds for KV caches
+but NOT for SSM recurrent state (pad tokens would pollute it) or
+capacity-bounded MoE routing (pad tokens would steal expert capacity
+from real rows - dropless dispatch computes every routed token, so each
+row's output is independent of its dispatch-group neighbours).
 """
 from __future__ import annotations
 
@@ -32,16 +34,25 @@ Array = jax.Array
 
 
 def check_servable(cfg: ModelConfig) -> None:
+    """Raise for architectures the serving engine cannot run correctly.
+
+    Attention configs serve (any layer-group period - the single-device
+    runner scans slots natively and the pipeline runner dispatches a
+    static block-kind schedule); MoE layers serve under DROPLESS dispatch
+    only. SSM/hybrid stay rejected: padded batched prefill relies on
+    causal masking, which protects KV attention but not recurrent state.
+    """
     sig = M.signature(cfg)
-    if M.find_period(sig) != 1:
+    if any(kind != "A" for kind, _, _ in sig):
         raise ValueError(
-            f"serving engine needs period-1 archs, got period {M.find_period(sig)}")
-    kind, is_moe, _ = sig[0]
-    if kind != "A" or is_moe:
+            "serving engine: SSM/hybrid archs are unservable - padded "
+            "batched prefill is masked out of KV attention but would "
+            "pollute the recurrent scan state")
+    if any(is_moe for _, is_moe, _ in sig) and cfg.moe.dispatch != "dropless":
         raise ValueError(
-            "serving engine needs attention-only, non-MoE archs: padded "
-            "prefill is masked out of KV attention but would pollute SSM "
-            "state / MoE expert capacity")
+            "serving engine: capacity-dropping MoE is unservable (padded "
+            "prefill rows steal expert capacity from real rows); set "
+            "moe.dispatch='dropless'")
 
 
 class SingleDeviceRunner:

@@ -10,26 +10,18 @@ sys.path.insert(0, SRC)
 
 
 def pytest_configure(config):
-    # The known-failure set lives IN-REPO as a marker (not as a hand-curated
-    # --deselect list in the CI workflow): the CI gate runs
-    # ``-m "not seed_broken"`` and the marked set shrinks as subsystems get
-    # fixed. A full local ``pytest`` run still executes the marked tests.
+    # Known-failure sets live IN-REPO as markers (not as hand-curated
+    # --deselect lists in the CI workflow), so the marked set shrinks in the
+    # same commit that fixes a subsystem. The historical ``seed_broken``
+    # marker (seed-era shard_map/jax-version breakage) emptied out and its
+    # plumbing is gone; the CI gate runs the plain suite.
     config.addinivalue_line(
         "markers",
-        "seed_broken: failing since the repo seed (shard_map/jax-version "
-        "breakage in subsystems untouched since then); excluded from the CI "
-        "gate - remove the mark when the subsystem is fixed. The set is "
-        "currently EMPTY: the last member (jamba decode) was diagnosed as "
-        "structural MoE capacity-dropping and split into the jamba_decode "
-        "xfail",
-    )
-    config.addinivalue_line(
-        "markers",
-        "jamba_decode: jamba greedy decode drifts from the teacher-forced "
-        "forward because capacity-bounded MoE token-dropping depends on the "
-        "dispatch-group token count (see test_models_smoke.py); xfail'd, "
-        "with the dropless companion test pinning the SSM/attention cache "
-        "handoff itself as exact",
+        "jamba_decode: tracks jamba greedy-decode vs teacher-forced-forward "
+        "agreement. RETIRED as an xfail: dropless MoE dispatch (the "
+        "default) computes every routed token, so a token's output no "
+        "longer depends on its dispatch-group size and decode matches the "
+        "forward - the test must now PASS (see test_models_smoke.py)",
     )
 
 

@@ -61,3 +61,26 @@ def test_noop_returns_empty(baseline):
     common.record_baseline({"a": 1.0})
     assert common.record_baseline({"a": 2.0}) == []
     assert _read(baseline) == {"a": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# run.py --only selection semantics
+
+
+def test_only_selection_exact_or_prefix():
+    """``--only`` matches exact names or explicit ``name_`` prefixes -
+    ``fig1`` must NOT silently swallow ``fig10_leakage_attack``, and an
+    entry matching nothing is an error, not an empty run."""
+    from benchmarks.run import ALL, select
+
+    assert select(ALL, "fig10") == ["fig10_leakage_attack"]
+    assert select(ALL, "pipeline") == ["pipeline"]
+    assert select(ALL, "moe_dispatch,zoo_plan_scoring") == [
+        "moe_dispatch", "zoo_plan_scoring"]
+    # list-order output regardless of spec order; duplicates collapse
+    assert select(ALL, "serving,pipeline,serving") == ["pipeline", "serving"]
+    with pytest.raises(SystemExit):
+        select(ALL, "fig1")  # prefix of fig10_... but not an explicit one
+    with pytest.raises(SystemExit):
+        select(ALL, "nope")
+    assert "moe_dispatch" in ALL and "zoo_plan_scoring" in ALL

@@ -74,21 +74,13 @@ def _decode_vs_forward_err(cfg) -> float:
 @pytest.mark.parametrize("arch", [
     "qwen2.5-3b",
     "mamba2-370m",
-    # NOT a cache-handoff bug (the dropless test below pins the handoff):
-    # capacity-bounded MoE dropping depends on the dispatch-group token
-    # count, so teacher-forced forward (8 tokens/group, capacity 5) drops
-    # tokens that single-token decode (capacity >= top_k) never drops.
-    # Structural - decode-consistent capacity would need a router-occupancy
-    # cache plus a capacity fixed against an unknown final length. Tracked
-    # as the jamba_decode xfail.
-    pytest.param("jamba-v0.1-52b", marks=[
-        pytest.mark.jamba_decode,
-        pytest.mark.xfail(
-            reason="MoE capacity token-dropping is dispatch-group-size "
-            "dependent; teacher-forced and decode disagree by design",
-            strict=False,
-        ),
-    ]),
+    # xfail RETIRED: under dropless MoE dispatch (the default) every routed
+    # token is computed, so a token's output is independent of its
+    # dispatch-group size and teacher-forced forward (8-token groups)
+    # agrees with single-token decode. The old capacity path (ceil(T*k*cf/E)
+    # buffer) dropped tokens group-size-dependently - that structural
+    # disagreement is what the xfail tracked.
+    pytest.param("jamba-v0.1-52b", marks=[pytest.mark.jamba_decode]),
 ])
 def test_decode_matches_forward(arch):
     """Greedy decode logits must match teacher-forced forward logits."""
@@ -96,16 +88,18 @@ def test_decode_matches_forward(arch):
     assert err < 2e-2, err
 
 
-def test_jamba_decode_matches_forward_dropless():
-    """The hybrid SSM/attention cache handoff IS exact: with MoE capacity
-    dropping neutralized (capacity_factor >> 1 admits every token in both
-    group sizes), jamba decode matches the teacher-forced forward. This
-    pins the jamba_decode xfail's diagnosis to capacity-dropping context
-    dependence rather than state handoff."""
+def test_jamba_decode_matches_forward_capacity_neutralized():
+    """The hybrid SSM/attention cache handoff is exact even on the legacy
+    CAPACITY dispatch path, once its dropping is neutralized
+    (capacity_factor >> 1 admits every token at both group sizes). This
+    keeps the retired jamba_decode xfail's diagnosis pinned: the old
+    decode drift came from capacity-dropping context dependence, not the
+    state handoff."""
     from dataclasses import replace
 
     cfg = get_config("jamba-v0.1-52b").reduced()
-    cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=64.0))
+    cfg = replace(cfg, moe=replace(cfg.moe, dispatch="capacity",
+                                   capacity_factor=64.0))
     err = _decode_vs_forward_err(cfg)
     assert err < 2e-2, err
 

@@ -223,6 +223,88 @@ print('F1B_8STAGE_OK', float(l0))
     assert "F1B_8STAGE_OK" in out
 
 
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "qwen3-moe-30b-a3b"])
+def test_1f1b_mixed_blocks_matches_forward_single_stage(arch):
+    """Mixed block types per stage (PR 9): the union-param + lax.switch
+    executor on a hybrid SSM/MoE (period-2) and pure-MoE stack must
+    match jax.value_and_grad of the plain forward pass - exact-zero
+    union rows for foreign fields must contribute exact-zero grads."""
+    from repro.models import model as M
+
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    mesh = make_stage_mesh(1)
+    tokens, labels = _data(cfg, rows=2, seq=16)
+
+    def ref_loss(p):
+        logits, _, _ = M.forward(p, tokens, cfg, compute_dtype=jnp.float32,
+                                 remat=False)
+        return M.softmax_xent(logits, labels)
+
+    l0, g0 = jax.jit(jax.value_and_grad(ref_loss))(params)
+    f1 = pipeline_step_fn(cfg, mesh, (cfg.num_layers,), 2,
+                          pipe=PipelineConfig(compute_dtype="float32"))
+    l1, g1 = jax.jit(f1)(params, tokens, labels)
+    np.testing.assert_allclose(float(l1), float(l0), rtol=RTOL)
+    _assert_grads_close(g0, g1)
+
+
+def test_1f1b_mixed_blocks_multistage(subproc):
+    """Hybrid period-2 stack split unevenly across a real 2-stage mesh:
+    the static per-slot block-kind schedule rides the shard_map scan
+    (codes restacked like the union params) and must reproduce the plain
+    forward loss/grads."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.model import init_params
+from repro.core.pipeline import PipelineConfig, make_stage_mesh, pipeline_step_fn
+
+base = get_config('jamba-v0.1-52b').reduced()
+cfg = replace(base, num_layers=4, block_pattern='AMAM')
+params = init_params(jax.random.PRNGKey(0), cfg)
+mesh = make_stage_mesh(2)
+rng = np.random.default_rng(0)
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)
+labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)
+
+def ref_loss(p):
+    logits, _, _ = M.forward(p, tokens, cfg, compute_dtype=jnp.float32,
+                             remat=False)
+    return M.softmax_xent(logits, labels)
+
+l0, g0 = jax.jit(jax.value_and_grad(ref_loss))(params)
+f1 = pipeline_step_fn(cfg, mesh, (1, 4), 2,  # uneven: stage lens 1/3
+                      pipe=PipelineConfig(compute_dtype='float32'))
+l1, g1 = jax.jit(f1)(params, tokens, labels)
+assert abs(float(l0) - float(l1)) <= 2e-5 * abs(float(l0)), (float(l0), float(l1))
+for (path, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(g0)[0],
+                             jax.tree_util.tree_flatten_with_path(g1)[0]):
+    a = np.asarray(a, np.float64); b = np.asarray(b, np.float64)
+    np.testing.assert_allclose(b, a, rtol=2e-5,
+                               atol=2e-5 * max(np.abs(a).max(), 1e-8),
+                               err_msg=jax.tree_util.keystr(path))
+print('MIXED_MULTISTAGE_OK', float(l0))
+""",
+        n_devices=2,
+    )
+    assert "MIXED_MULTISTAGE_OK" in out
+
+
+def test_fill_drain_rejects_mixed_period():
+    """The fill-drain reference stays period-1 only; mixed stacks must
+    raise the redirect to the 1F1B schedule, not silently mis-stack."""
+    from repro.core.pipeline import pipeline_loss_fn
+
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    mesh = make_stage_mesh(1)
+    with pytest.raises(AssertionError, match="1f1b"):
+        pipeline_loss_fn(cfg, mesh, (cfg.num_layers,), 2)
+
+
 def test_restack_unstack_roundtrip():
     """unstack_stage_grads inverts restack_for_stages for any split."""
     leaf = jnp.arange(5 * 3 * 2, dtype=jnp.float32).reshape(5, 3, 2)

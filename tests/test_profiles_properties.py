@@ -1,0 +1,127 @@
+"""Property-based pins on :mod:`repro.core.profiles` derived tables.
+
+The plan scorer prices a stage as two gathers into cumulative tables
+(``fwd_cum[hi] - fwd_cum[lo]``) instead of summing the per-layer slice.
+For that rewrite to be EXACTLY the seed semantics the cumulative-gather
+difference must be bit-equal to the direct segment sum - which holds
+whenever the per-layer values (and all their partial sums) are exactly
+representable in float64. The property tests draw integer-valued
+profiles (each value < 2^40, L <= 12, so every partial sum < 2^53) and
+pin bit-equality over the FULL boundary enumeration, including the
+PR-9 architecture-aware ``state_cum``/``kind`` columns and the
+legacy-``None`` normalization in :func:`profile_digest`.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip, unit tests still run
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.profiles import (
+    KIND_ATTN_MOE, KIND_SSM, KIND_SSM_MOE, LayerProfile, block_kind,
+    profile_digest, profile_table, transformer_profile,
+)
+from repro.core.splitting import stack_boundaries
+
+# one drawn row per layer: (act, fwd, bwd, state, kind). Integer-valued
+# so float64 cumsum arithmetic is exact (see module docstring).
+_ROW = st.tuples(
+    st.integers(min_value=1, max_value=2**40),  # act_bytes (>0: leak_norm)
+    st.integers(min_value=0, max_value=2**40),  # fwd_flops
+    st.integers(min_value=0, max_value=2**40),  # bwd_flops
+    st.integers(min_value=0, max_value=2**40),  # state_bytes
+    st.integers(min_value=0, max_value=3),      # KIND_* code
+)
+_ROWS = st.lists(_ROW, min_size=4, max_size=12)
+
+
+def _profile_from_rows(rows, with_state=True):
+    act, fwd, bwd, state, kind = (np.asarray(c, np.float64)
+                                  for c in zip(*rows))
+    return LayerProfile(
+        name="property-draw",
+        param_bytes=act.copy(),
+        act_bytes=act,
+        grad_bytes=act.copy(),
+        fwd_flops=fwd,
+        bwd_flops=bwd,
+        leak_value=act.copy(),
+        state_bytes=state if with_state else None,
+        kind=kind.astype(np.int8) if with_state else None,
+    )
+
+
+@given(rows=_ROWS, s=st.integers(min_value=2, max_value=4))
+@settings(max_examples=40, deadline=None)
+def test_cumulative_tables_bit_equal_segment_sums(rows, s):
+    """Every (lo, hi) stage segment of every S-way cut of a random
+    integer-valued profile: cumulative-gather difference == direct
+    per-segment sum, BITWISE, for fwd/bwd/state columns alike."""
+    prof = _profile_from_rows(rows)
+    tab = profile_table(prof)
+    L = prof.num_layers
+    s = min(s, L)
+
+    assert tab.fwd_cum[0] == 0.0 and tab.bwd_cum[0] == 0.0
+    assert tab.state_cum[0] == 0.0
+    # bits columns are exact *8 of the drawn integers
+    assert np.array_equal(tab.act_bits, prof.act_bytes * 8.0)
+    assert np.array_equal(tab.state_bits, prof.state_bytes * 8.0)
+    assert np.array_equal(tab.kind, prof.kind)
+
+    for bounds in stack_boundaries(L, s):
+        edges = [0, *(int(b) for b in bounds)]
+        for lo, hi in zip(edges[:-1], edges[1:]):
+            assert (tab.fwd_cum[hi] - tab.fwd_cum[lo]
+                    == prof.fwd_flops[lo:hi].sum())
+            assert (tab.bwd_cum[hi] - tab.bwd_cum[lo]
+                    == prof.bwd_flops[lo:hi].sum())
+            assert (tab.state_cum[hi] - tab.state_cum[lo]
+                    == prof.state_bytes[lo:hi].sum() * 8.0)
+
+
+@given(rows=_ROWS)
+@settings(max_examples=20, deadline=None)
+def test_legacy_none_state_matches_explicit_zeros(rows):
+    """A profile built without the PR-9 columns (state_bytes=kind=None)
+    must digest - and therefore cache - identically to one carrying
+    explicit zeros, and differently once any state is nonzero."""
+    legacy = _profile_from_rows(rows, with_state=False)
+    zeroed = LayerProfile(
+        name=legacy.name, param_bytes=legacy.param_bytes,
+        act_bytes=legacy.act_bytes, grad_bytes=legacy.grad_bytes,
+        fwd_flops=legacy.fwd_flops, bwd_flops=legacy.bwd_flops,
+        leak_value=legacy.leak_value,
+        state_bytes=np.zeros(legacy.num_layers),
+        kind=np.zeros(legacy.num_layers, np.int8),
+    )
+    assert profile_digest(legacy) == profile_digest(zeroed)
+    assert profile_table(legacy) is profile_table(zeroed)
+    assert np.array_equal(profile_table(legacy).state_cum,
+                          np.zeros(legacy.num_layers + 1))
+
+    stated = _profile_from_rows(rows)
+    if stated.state_bytes.any() or stated.kind.any():
+        assert profile_digest(stated) != profile_digest(legacy)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-moe-30b-a3b", "jamba-v0.1-52b",
+                                  "mamba2-370m"])
+def test_transformer_profile_kind_column_matches_config(arch):
+    """The profile's kind codes must agree with ``block_kind`` over the
+    config pattern, and every heterogeneous zoo config must carry
+    strictly positive resident state on every block."""
+    cfg = get_config(arch)
+    prof = transformer_profile(cfg, batch=1, seq=512)
+    tab = profile_table(prof)
+    expect = np.asarray([block_kind(cfg, i) for i in range(cfg.num_layers)],
+                        np.int8)
+    assert np.array_equal(tab.kind, expect)
+    assert np.all(tab.state_bits > 0)
+    if arch == "jamba-v0.1-52b":
+        assert {KIND_SSM, KIND_SSM_MOE} <= set(int(k) for k in tab.kind)
+    if arch == "qwen3-moe-30b-a3b":
+        assert set(int(k) for k in tab.kind) == {KIND_ATTN_MOE}

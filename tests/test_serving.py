@@ -70,11 +70,21 @@ def test_vector_cache_index_bitwise_matches_scalar():
         assert jnp.array_equal(a, bb)
 
 
-def test_check_servable_rejects_ssm_and_moe():
+def test_check_servable_moe_and_ssm_gates():
+    """PR 9 servability matrix: SSM/hybrid stay rejected (padded prefill
+    pollutes recurrent state), MoE serves under dropless dispatch ONLY
+    (capacity buffers let padding rows steal expert capacity)."""
+    from dataclasses import replace
     from repro.configs import get_config
 
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="SSM/hybrid"):
         check_servable(get_config("jamba-v0.1-52b").reduced())
+    with pytest.raises(ValueError, match="SSM/hybrid"):
+        check_servable(get_config("mamba2-370m").reduced())
+    moe = get_config("qwen3-moe-30b-a3b").reduced()
+    check_servable(moe)  # dropless (the default): servable
+    with pytest.raises(ValueError, match="dropless"):
+        check_servable(replace(moe, moe=replace(moe.moe, dispatch="capacity")))
 
 
 # ---------------------------------------------------------------------------
@@ -301,3 +311,54 @@ print("PIPE_SERVE_OK", len(a["completions"]))
 """,
         n_devices=2)
     assert "PIPE_SERVE_OK 5" in out
+
+
+def test_pipeline_serve_moe_prefill_bitwise(subproc):
+    """MoE stages through the serving token ring (PR 9): dropless
+    dispatch makes every row per-row independent, so the padded pipeline
+    prefill must be BITWISE the plain forward pass - for the pure-MoE
+    period-1 config AND a mixed MoE/dense period-2 stack - and a decode
+    tick must produce finite logits. Capacity dispatch is refused."""
+    out = subproc(
+        """
+import jax, jax.numpy as jnp, numpy as np
+from dataclasses import replace
+from repro.configs import get_config
+from repro.core.pipeline import (
+    PipelineConfig, make_stage_mesh, pipeline_serve_fns, stage_kv_caches)
+from repro.models import model as M
+from repro.models.model import init_params
+
+mesh = make_stage_mesh(2)
+base = get_config('qwen3-moe-30b-a3b').reduced()
+cases = {
+    'period1': replace(base, num_layers=2),
+    'period2_mixed': replace(base, num_layers=4, d_ff=96,
+                             moe=replace(base.moe, moe_every=2)),
+}
+for name, cfg in cases.items():
+    bounds = (1, cfg.num_layers)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prefill, decode = pipeline_serve_fns(cfg, mesh, bounds)
+    b, p = 2, 8
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, p)), jnp.int32)
+    caches = stage_kv_caches(cfg, bounds, b, p + 4)
+    lg, caches = jax.jit(prefill)(params, caches, prompts)
+    ref, _, _ = M.forward(params, prompts, cfg, compute_dtype=jnp.float32)
+    assert jnp.array_equal(lg, ref), name
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    dlg, caches = jax.jit(decode)(params, tok, caches,
+                                  jnp.full((b,), p, jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(dlg))), name
+try:
+    pipeline_serve_fns(
+        replace(cases['period1'],
+                moe=replace(base.moe, dispatch='capacity')), mesh, (1, 2))
+    raise SystemExit('capacity MoE dispatch not refused')
+except ValueError as e:
+    assert 'dropless' in str(e)
+print('MOE_SERVE_OK', len(cases))
+""",
+        n_devices=2)
+    assert "MOE_SERVE_OK 2" in out

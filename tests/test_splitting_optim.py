@@ -100,6 +100,36 @@ def test_score_plans_matches_plan_cost_full_enumeration(L, s):
     np.testing.assert_allclose(np.asarray(e), ref[:, 1], rtol=2e-6)
 
 
+@pytest.mark.parametrize("arch", ["qwen3-moe-30b-a3b", "jamba-v0.1-52b"])
+def test_state_priced_score_plans_matches_plan_cost(arch):
+    """Architecture-aware pricing parity: with a nonzero
+    ``state_cycles_per_bit`` the vectorized scorer must still reproduce
+    the python ``plan_cost`` loop over a heterogeneous profile (KV vs SSM
+    state vs resident MoE expert banks all priced through
+    ``ProfileTable.state_cum``), and the pricing must actually BITE -
+    plan delays strictly above the unpriced ones."""
+    from dataclasses import replace
+
+    s = 3
+    prof = transformer_profile(get_config(arch), batch=1, seq=512)
+    assert float(np.asarray(prof.state_bytes).sum()) > 0
+    net0, pos, devices, p_tx, decoy = _score_setup(s)
+    net = replace(net0, state_cycles_per_bit=0.01)
+    bounds = stack_boundaries(prof.num_layers, s)[::7].copy()
+    ref = np.asarray([
+        plan_cost(prof, SplitPlan(tuple(int(x) for x in b), devices), pos,
+                  p_tx, decoy, net)
+        for b in bounds
+    ])
+    t, e = score_plans(prof, bounds, np.asarray(devices), pos, p_tx, decoy, net)
+    np.testing.assert_allclose(np.asarray(t), ref[:, 0], rtol=2e-6)
+    np.testing.assert_allclose(np.asarray(e), ref[:, 1], rtol=2e-6)
+    t0, e0 = score_plans(prof, bounds, np.asarray(devices), pos, p_tx, decoy,
+                         net0)
+    assert np.all(np.asarray(t) > np.asarray(t0))
+    assert np.all(np.asarray(e) > np.asarray(e0))
+
+
 def test_plan_scorer_single_trace_across_sweeps():
     """Boundary-sweep recompile audit: re-scoring different boundary
     batches, positions, powers, AND ScenarioParams values reuses ONE
