@@ -18,6 +18,13 @@ Two measurements:
   is dispatch-bound. Both sides warm their compiles before the clock
   starts, and the engine's compiled-trace count is audited (1 trace
   across arrivals, completions, and drain).
+* ``faulted_serving`` - the 1-stage engine on one trace fault-free vs
+  under ``core.faults.reference_schedule`` (device 0 out for fault-clock
+  ticks [4, 9), hops at 80% bandwidth): rps/p50 both sides, recovery
+  tick count, eviction count, and a bitwise completion check (rid-keyed
+  sampling makes even re-served requests identical). The chaos-smoke CI
+  gate reads this entry and fails if degraded rps falls below the static
+  baseline.
 * ``decode_fusion`` - tok/s of the fused single-dispatch decode
   (``make_generate_fn``: one ``lax.scan`` over the whole generation) vs
   the v0 per-token loop (one jitted dispatch + host sync per token),
@@ -89,6 +96,85 @@ drop = ("completions", "latencies", "replans")
 print("RESULT " + json.dumps({
     "static": {k: v for k, v in stat.items() if k not in drop},
     "engine": {k: v for k, v in eng.items() if k not in drop},
+    "engine_traces": len(svc.step.trace_count),
+    "tokens_match": bool(match),
+}, default=float))
+"""
+
+
+# Degraded-mode serving under the REFERENCE fault schedule (device 0
+# out for fault-clock ticks [4, 9), all hops at 80% bandwidth) vs the
+# same engine fault-free and the static baseline. Clean subprocess,
+# RESULT json line, same contract as _SERVE_SNIPPET.
+_FAULT_SNIPPET = """
+import json, os
+import numpy as np
+
+from benchmarks.common import enable_persistent_cache
+
+enable_persistent_cache()
+
+from repro.core import faults as F
+from repro.serving import ServeConfig, ServingService, poisson_trace
+from repro.serving.engine import init_engine_state
+from repro.launch.serve import run_static
+
+SPEC = json.loads(os.environ["SERVE_BENCH_SPEC"])
+cfg = ServeConfig.load(None, SPEC["serve"])
+mc = cfg.model_config()
+trace = poisson_trace(
+    n_requests=SPEC["requests"], rate_per_sec=SPEC["rate"],
+    vocab_size=mc.vocab_size, plen_range=(4, cfg.prompt_pad),
+    gen_range=(4, cfg.max_new), seed=SPEC["seed"])
+warm = poisson_trace(
+    n_requests=2, rate_per_sec=1e9, vocab_size=mc.vocab_size,
+    plen_range=(4, cfg.prompt_pad), gen_range=(2, 4), seed=SPEC["seed"] + 1)
+
+svc = ServingService(cfg)
+svc.run(warm)  # compile off the clock
+# warm the FAULT path off the clock too (evict_slots + replanner oracle
+# compile once): a tiny trace under an outage that fires on tick 1, so
+# the eviction/replan/recovery machinery runs before timing starts -
+# symmetric with the static baseline's warmup=True and the engine warm
+wsched = F.make_schedule(
+    1, 1, outages=[(0, 1 * cfg.fault_tick_s, 3 * cfg.fault_tick_s)],
+    hop_bandwidth_scale=[0.8])
+svc.state = init_engine_state(svc.runner, cfg.num_slots, cfg.prompt_pad,
+                              cfg.max_new)
+svc.run(list(warm), faults=wsched)
+
+def fresh_run(faults=None):
+    svc.state = init_engine_state(svc.runner, cfg.num_slots, cfg.prompt_pad,
+                                  cfg.max_new)
+    return svc.run(list(trace), faults=faults)
+
+# Best-of-REPS per phase (min wall): scheduling noise on a shared box is
+# one-sided slowdown, so the min is the right point estimate for the
+# rps >= static CI gate. Token bitwise-match is asserted on EVERY rep.
+REPS = 2
+sched = F.reference_schedule(1, 1, tick_seconds=cfg.fault_tick_s)
+stat = free = faulted = None
+match = True
+for _ in range(REPS):
+    s = run_static(cfg, trace, warmup=True)
+    fr = fresh_run()
+    fa = fresh_run(faults=sched)
+    match = match and (
+        set(fr["completions"]) == set(fa["completions"]) and all(
+            np.array_equal(fr["completions"][r], fa["completions"][r])
+            for r in fr["completions"]))
+    best = lambda a, b: b if a is None or b["wall_seconds"] < a["wall_seconds"] else a
+    stat, free, faulted = best(stat, s), best(free, fr), best(faulted, fa)
+
+keep = ("num_requests", "wall_seconds", "ticks", "requests_per_sec",
+        "tokens_per_sec", "p50_latency_s", "p99_latency_s",
+        "fault_events", "retries", "evictions", "recovery_ticks")
+print("RESULT " + json.dumps({
+    "static": {k: v for k, v in stat.items()
+               if k in ("requests_per_sec", "p50_latency_s",
+                        "wall_seconds", "num_requests")},
+    "fault_free": {k: v for k, v in free.items() if k in keep},
+    "faulted": {k: v for k, v in faulted.items() if k in keep},
     "engine_traces": len(svc.step.trace_count),
     "tokens_match": bool(match),
 }, default=float))
@@ -168,6 +254,43 @@ def _serving_cases(bench: BenchConfig, seed: int):
     return rows
 
 
+def _faulted_serving(bench: BenchConfig, seed: int):
+    """Degraded-mode serving: the 1-stage engine under the reference
+    fault schedule vs fault-free, plus the static baseline on the same
+    trace. The fault clock runs at 5ms/tick so the injected outage costs
+    a fixed ~25ms stall + one eviction/recovery cycle - the CI gate
+    checks degraded rps still clears the static baseline."""
+    case = ({"requests": 128, "rate": 512.0,
+             "serve": {"num_slots": 4, "arrival_slots": 4, "prompt_pad": 8,
+                       "max_new": 24, "decode_chunk": 8}}
+            if bench.smoke else
+            {"requests": 128, "rate": 512.0,
+             "serve": {"num_slots": 8, "arrival_slots": 8, "prompt_pad": 8,
+                       "max_new": 48, "decode_chunk": 12}})
+    spec = {"requests": case["requests"], "rate": case["rate"], "seed": seed,
+            "serve": dict(case["serve"], seed=seed, fault_tick_s=0.005,
+                          max_retries=3, retry_backoff_s=0.002)}
+    env = _case_env(1)
+    env["SERVE_BENCH_SPEC"] = json.dumps(spec)
+    res = subprocess.run([sys.executable, "-c", _FAULT_SNIPPET],
+                         capture_output=True, text=True, timeout=3000,
+                         env=env, cwd=REPO_ROOT)
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"faulted-serving subprocess failed:\n{res.stderr[-3000:]}")
+    line = [l for l in res.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    row = json.loads(line[len("RESULT "):])
+    row["spec"] = spec
+    row["rps_degradation"] = (
+        row["faulted"]["requests_per_sec"]
+        / max(row["fault_free"]["requests_per_sec"], 1e-12))
+    row["rps_vs_static"] = (
+        row["faulted"]["requests_per_sec"]
+        / max(row["static"]["requests_per_sec"], 1e-12))
+    return row
+
+
 def _decode_fusion(bench: BenchConfig, seed: int):
     """Fused-scan generate vs the v0 per-token loop, warm jits both
     sides. The loop body here mirrors ``batching.decode_python_loop``
@@ -244,6 +367,7 @@ def _decode_fusion(bench: BenchConfig, seed: int):
 def main(bench: BenchConfig = BenchConfig(), seed: int = 0,
          force: bool = False):
     cases = _serving_cases(bench, seed)
+    faulted = _faulted_serving(bench, seed)
     fusion = _decode_fusion(bench, seed)
 
     for row in cases:
@@ -258,12 +382,22 @@ def main(bench: BenchConfig = BenchConfig(), seed: int = 0,
             f"ticks={row['engine']['ticks']} "
             f"traces={row['engine_traces']} match={row['tokens_match']}")
     emit_csv_row(
+        "serving/faulted", 1e6 * faulted["faulted"]["wall_seconds"],
+        f"faulted_rps={faulted['faulted']['requests_per_sec']:.2f} "
+        f"free_rps={faulted['fault_free']['requests_per_sec']:.2f} "
+        f"static_rps={faulted['static']['requests_per_sec']:.2f} "
+        f"degradation={faulted['rps_degradation']:.2f}x "
+        f"recovery_ticks={faulted['faulted']['recovery_ticks']} "
+        f"evictions={faulted['faulted']['evictions']} "
+        f"traces={faulted['engine_traces']} match={faulted['tokens_match']}")
+    emit_csv_row(
         "serving/decode_fusion", 1e6 * fusion["fused_s"],
         f"fused_tok_s={fusion['fused_tok_s']:.0f} "
         f"loop_tok_s={fusion['loop_tok_s']:.0f} "
         f"speedup={fusion['speedup']:.1f}x match={fusion['tokens_match']}")
 
-    payload = {"serving": {"cases": cases}, "decode_fusion": fusion}
+    payload = {"serving": {"cases": cases}, "faulted_serving": faulted,
+               "decode_fusion": fusion}
     save_json("serving", payload)
     if not bench.smoke:
         record_baseline(payload, force=force, path=SERVING_BASELINE)

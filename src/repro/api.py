@@ -15,6 +15,11 @@ of deep submodule paths:
   per-boundary values, :func:`train_empirical_model`).
 * **Model stack** - configs, params, train step, data, optimizers,
   checkpointing, used by the quickstart and the pipeline drivers.
+* **Fault tolerance** - :class:`FaultSchedule` /
+  :func:`sample_fault_schedule` (seeded replayable outages),
+  :func:`degrade_scenario` (fold hop degradation into scenario
+  physics), consumed by ``ServingService.run(faults=...)`` and the
+  kill-and-resume chaos harness (``repro.launch.chaos``).
 """
 from __future__ import annotations
 
@@ -27,6 +32,9 @@ from repro.core.agents.loops import train_sac
 from repro.core.agents.sac import SACConfig, select_action
 from repro.core.channel import NetworkConfig
 from repro.core.env import MHSLEnv
+from repro.core.faults import (FaultClock, FaultSchedule, degrade_scenario,
+                               fault_free, make_schedule, reference_schedule,
+                               sample_fault_schedule)
 from repro.core.leakage import (AnalyticLeakage, EmpiricalLeakage,
                                 LeakageModel, evaluate_leakage,
                                 plan_hop_geometry)
@@ -54,6 +62,8 @@ __all__ = [
     "AnalyticLeakage",
     "AttackConfig",
     "EmpiricalLeakage",
+    "FaultClock",
+    "FaultSchedule",
     "LeakageModel",
     "MHSLEnv",
     "NetworkConfig",
@@ -64,20 +74,25 @@ __all__ = [
     "ServingService",
     "adamw",
     "capture_weight",
+    "degrade_scenario",
     "evaluate_leakage",
     "evaluate_population",
+    "fault_free",
     "flat_dim",
     "get_config",
     "init_params",
     "linear_warmup_cosine",
     "load_pytree",
     "make_plan_scorer",
+    "make_schedule",
     "make_split_oracle",
     "make_stage_mesh",
     "make_train_step",
     "onehot",
     "pipeline_step_fn",
     "plan_hop_geometry",
+    "reference_schedule",
+    "sample_fault_schedule",
     "save_pytree",
     "score_plans",
     "select_action",

@@ -29,6 +29,12 @@ def _key_str(path) -> str:
 
 
 def save_pytree(tree: Any, path: str) -> None:
+    """Atomic write: the archive lands under ``path`` only via
+    ``os.replace`` of a fully-written temp file, so a crash (or SIGKILL -
+    the chaos harness does exactly this) mid-save can never leave a torn
+    half-archive where a resumable checkpoint is expected. The temp file
+    is written through an open handle because ``np.savez`` appends
+    ``.npz`` to bare path names."""
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {}
     manifest = []
@@ -42,7 +48,15 @@ def save_pytree(tree: Any, path: str) -> None:
             manifest.append(k)
         arrays[k] = arr
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, __manifest__=np.asarray(json.dumps(manifest)), **arrays)
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __manifest__=np.asarray(json.dumps(manifest)),
+                     **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def load_pytree(path: str, like: Any, *, shardings: Optional[Any] = None) -> Any:

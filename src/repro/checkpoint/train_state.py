@@ -109,9 +109,12 @@ def latest_checkpoint_step(directory: str) -> Optional[int]:
         return None
     latest = os.path.join(directory, "LATEST")
     if os.path.exists(latest):
-        with open(latest) as f:
-            step = int(f.read().strip())
-        if _complete(directory, step):
+        try:
+            with open(latest) as f:
+                step = int(f.read().strip())
+        except (ValueError, OSError):
+            step = None  # unreadable/garbage LATEST: fall back to the scan
+        if step is not None and _complete(directory, step):
             return step
     steps = [int(m.group(1)) for name in os.listdir(directory)
              if (m := _STEP_RE.match(name)) and _complete(directory,

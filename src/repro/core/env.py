@@ -146,32 +146,42 @@ class MHSLEnv:
     def make_split_oracle(self):
         """Device-side oracle over EVERY split of this env's profile.
 
-        Returns ``oracle(dev_pos, devices, p_tx, decoy_power, scenario=None)``
-        scoring all ``(L-1 choose S-1)`` boundary plans (Eq. 10/11 static
-        cost) in one jitted dispatch for a candidate device assignment
-        ``devices`` (S,), per-hop trainer powers ``p_tx`` (S-1,) and decoy
-        powers ``decoy_power`` (S-1, U+1). ``dev_pos`` is the (U+1, 2)
-        position array from an :class:`EnvState`. The result dict carries
-        the stacked ``boundaries`` plus per-plan ``delay``/``energy`` and a
-        ``feasible`` mask against the scenario budgets - the fast oracle
-        for masking split-size actions that cannot meet Eq. 10/11, and the
-        batched replacement for per-plan :func:`repro.core.splitting.plan_cost`
-        loops. Scenario sweeps reuse one trace (``oracle.trace_count``).
+        Returns ``oracle(dev_pos, devices, p_tx, decoy_power, scenario=None,
+        device_mask=None)`` scoring all ``(L-1 choose S-1)`` boundary plans
+        (Eq. 10/11 static cost) in one jitted dispatch for a candidate device
+        assignment ``devices`` (S,), per-hop trainer powers ``p_tx`` (S-1,)
+        and decoy powers ``decoy_power`` (S-1, U+1). ``dev_pos`` is the
+        (U+1, 2) position array from an :class:`EnvState`. The result dict
+        carries the stacked ``boundaries`` plus per-plan ``delay``/``energy``
+        and a ``feasible`` mask against the scenario budgets - the fast
+        oracle for masking split-size actions that cannot meet Eq. 10/11,
+        and the batched replacement for per-plan
+        :func:`repro.core.splitting.plan_cost` loops. ``device_mask`` is an
+        optional ``(U+1,)`` up/down mask (``core.faults.device_up``): plans
+        whose assignment touches a down device are marked infeasible, which
+        is how failure-aware re-planning routes around an outage. Scenario
+        and mask values are runtime args - sweeps and fault injection reuse
+        one trace (``oracle.trace_count``).
         """
-        from repro.core.splitting import make_plan_scorer, stack_boundaries
+        from repro.core.splitting import (make_plan_scorer, plan_devices_up,
+                                          stack_boundaries)
 
         bounds = stack_boundaries(self.L, self.S)
         scorer = make_plan_scorer(self.profile)
 
         def oracle(dev_pos, devices, p_tx, decoy_power,
-                   scenario: Optional[ScenarioParams] = None):
+                   scenario: Optional[ScenarioParams] = None,
+                   device_mask=None):
             sp = self._params(scenario)
             t, e = scorer(bounds, devices, dev_pos, p_tx, decoy_power, sp)
+            feasible = (t <= sp.gamma_t) & (e <= sp.gamma_e)
+            if device_mask is not None:
+                feasible = feasible & plan_devices_up(devices, device_mask)
             return {
                 "boundaries": bounds,
                 "delay": t,
                 "energy": e,
-                "feasible": (t <= sp.gamma_t) & (e <= sp.gamma_e),
+                "feasible": feasible,
             }
 
         oracle.trace_count = scorer.trace_count

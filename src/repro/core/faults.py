@@ -1,0 +1,289 @@
+"""Deterministic fault injection for the unreliable wireless edge.
+
+The paper's whole setting is devices that come and go: eavesdroppers
+monitor, links degrade, and the agent must keep choosing feasible
+device/split assignments anyway.  This module makes that an explicit,
+REPLAYABLE input instead of an accident of the host environment:
+
+* :class:`FaultSchedule` - a pytree of jnp leaves describing per-device
+  outage windows, per-hop link drop/slowdown multipliers, and per-device
+  straggler factors.  Like :class:`repro.core.scenario.ScenarioParams`
+  it is a *runtime argument*: injecting, moving, or clearing faults
+  never retraces a compiled function (pinned by
+  ``tests/test_faults.py``).
+* :class:`FaultClock` - the single mapping from executor ticks / the
+  serving service's virtual time onto the schedule's time axis, so the
+  1F1B transport simulator and the serving loop read the SAME outage
+  windows.
+* :func:`degrade_scenario` - folds the schedule's link degradation into
+  a ``ScenarioParams``, which is how the Eq. 10/11 plan oracle, the
+  transport tick model, and the online re-planner all price partial
+  outage from one source of truth.
+
+Schedules are either hand-built (:func:`fault_free`,
+:func:`reference_schedule`) or sampled from a PRNG key
+(:func:`sample_fault_schedule`) - seeded, so a chaos run is replayable
+bit-for-bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_INF = float("inf")
+
+
+class FaultSchedule(NamedTuple):
+    """Dynamic fault state of one deployment (all leaves jnp arrays).
+
+    ``D`` devices (the env's ``U`` trainers plus the server as row
+    ``U``), ``W`` outage windows per device, ``H`` inter-stage hops
+    (``max_split - 1``, matching ``ScenarioParams.hop_bandwidth_hz``).
+    Unused outage windows are ``[inf, inf)`` and match no time.
+    """
+
+    outage_start: Array  # (D, W) seconds; inf = unused window
+    outage_end: Array    # (D, W) seconds (half-open [start, end))
+    hop_bandwidth_scale: Array  # (H,) multiplier in (0, 1] on link bandwidth
+    hop_latency_add_s: Array    # (H,) added fixed per-hop latency (s)
+    compute_slowdown: Array     # (D,) straggler multiplier >= 1 on compute
+
+    @property
+    def num_devices(self) -> int:
+        return self.outage_start.shape[-2]
+
+    @property
+    def num_windows(self) -> int:
+        return self.outage_start.shape[-1]
+
+    @property
+    def num_hops(self) -> int:
+        return self.hop_bandwidth_scale.shape[-1]
+
+
+def fault_free(num_devices: int, num_hops: int,
+               num_windows: int = 1) -> FaultSchedule:
+    """The no-op schedule: no outages, unit link scale, no stragglers.
+
+    Every query under it reproduces the fault-free numbers bit-exactly
+    (``degrade_scenario`` with unit scale / zero add multiplies by 1.0
+    and adds 0.0 in f32 - an exact no-op on finite values).
+    """
+    return FaultSchedule(
+        outage_start=jnp.full((num_devices, num_windows), _INF, jnp.float32),
+        outage_end=jnp.full((num_devices, num_windows), _INF, jnp.float32),
+        hop_bandwidth_scale=jnp.ones((num_hops,), jnp.float32),
+        hop_latency_add_s=jnp.zeros((num_hops,), jnp.float32),
+        compute_slowdown=jnp.ones((num_devices,), jnp.float32),
+    )
+
+
+def make_schedule(
+    num_devices: int,
+    num_hops: int,
+    *,
+    outages: Sequence[Tuple[int, float, float]] = (),
+    hop_bandwidth_scale: Optional[Sequence[float]] = None,
+    hop_latency_add_s: Optional[Sequence[float]] = None,
+    compute_slowdown: Optional[Sequence[float]] = None,
+    num_windows: Optional[int] = None,
+) -> FaultSchedule:
+    """Hand-built schedule: ``outages`` is a list of
+    ``(device, start_s, end_s)`` windows; the degradation vectors default
+    to the fault-free values."""
+    per_dev: dict = {}
+    for dev, t0, t1 in outages:
+        if not 0 <= dev < num_devices:
+            raise ValueError(f"outage device {dev} not in [0, {num_devices})")
+        if not t1 > t0:
+            raise ValueError(f"outage window [{t0}, {t1}) is empty")
+        per_dev.setdefault(int(dev), []).append((float(t0), float(t1)))
+    w = max([len(v) for v in per_dev.values()] + [1])
+    if num_windows is not None:
+        if num_windows < w:
+            raise ValueError(
+                f"num_windows={num_windows} < {w} windows on one device")
+        w = num_windows
+    start = np.full((num_devices, w), _INF, np.float32)
+    end = np.full((num_devices, w), _INF, np.float32)
+    for dev, wins in per_dev.items():
+        for i, (t0, t1) in enumerate(sorted(wins)):
+            start[dev, i] = t0
+            end[dev, i] = t1
+    base = fault_free(num_devices, num_hops, w)
+    return base._replace(
+        outage_start=jnp.asarray(start),
+        outage_end=jnp.asarray(end),
+        hop_bandwidth_scale=(
+            base.hop_bandwidth_scale if hop_bandwidth_scale is None
+            else jnp.asarray(hop_bandwidth_scale, jnp.float32)),
+        hop_latency_add_s=(
+            base.hop_latency_add_s if hop_latency_add_s is None
+            else jnp.asarray(hop_latency_add_s, jnp.float32)),
+        compute_slowdown=(
+            base.compute_slowdown if compute_slowdown is None
+            else jnp.asarray(compute_slowdown, jnp.float32)),
+    )
+
+
+def sample_fault_schedule(
+    key,
+    num_devices: int,
+    num_hops: int,
+    *,
+    horizon_s: float,
+    num_windows: int = 1,
+    outage_prob: float = 0.3,
+    outage_len_s: Tuple[float, float] = (0.05, 0.5),
+    bandwidth_scale: Tuple[float, float] = (0.5, 1.0),
+    latency_add_s: Tuple[float, float] = (0.0, 0.0),
+    slowdown: Tuple[float, float] = (1.0, 1.0),
+) -> FaultSchedule:
+    """Seeded random schedule: each (device, window) slot is an outage
+    with probability ``outage_prob``, starting uniformly in the horizon
+    with a uniform length; hop/straggler degradations draw uniformly
+    from their ranges.  Same key -> bit-identical schedule (the replay
+    contract chaos runs lean on)."""
+    k_on, k_t0, k_len, k_bw, k_lat, k_slow = jax.random.split(key, 6)
+    shape = (num_devices, num_windows)
+    on = jax.random.bernoulli(k_on, outage_prob, shape)
+    t0 = jax.random.uniform(k_t0, shape, minval=0.0, maxval=horizon_s)
+    ln = jax.random.uniform(k_len, shape, minval=outage_len_s[0],
+                            maxval=outage_len_s[1])
+    start = jnp.where(on, t0, _INF).astype(jnp.float32)
+    end = jnp.where(on, t0 + ln, _INF).astype(jnp.float32)
+    return FaultSchedule(
+        outage_start=start,
+        outage_end=end,
+        hop_bandwidth_scale=jax.random.uniform(
+            k_bw, (num_hops,), minval=bandwidth_scale[0],
+            maxval=bandwidth_scale[1]).astype(jnp.float32),
+        hop_latency_add_s=jax.random.uniform(
+            k_lat, (num_hops,), minval=latency_add_s[0],
+            maxval=latency_add_s[1]).astype(jnp.float32),
+        compute_slowdown=jax.random.uniform(
+            k_slow, (num_devices,), minval=slowdown[0],
+            maxval=slowdown[1]).astype(jnp.float32),
+    )
+
+
+def reference_schedule(num_devices: int, num_hops: int, *,
+                       tick_seconds: float = 0.02) -> FaultSchedule:
+    """The fixed reference schedule used by the chaos benchmarks / CI
+    gate: device 0 drops out for ticks [4, 9) of the serving fault
+    clock, every hop runs at 80% bandwidth.  Deterministic by
+    construction (no PRNG)."""
+    return make_schedule(
+        num_devices, num_hops,
+        outages=[(0, 4 * tick_seconds, 9 * tick_seconds)],
+        hop_bandwidth_scale=[0.8] * num_hops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# queries (jnp-pure: safe inside jit, cheap outside)
+# ---------------------------------------------------------------------------
+
+
+def device_up(schedule: FaultSchedule, t) -> Array:
+    """(D,) bool mask: device is OUTSIDE every outage window at time t."""
+    t = jnp.asarray(t, jnp.float32)
+    down = ((t >= schedule.outage_start)
+            & (t < schedule.outage_end)).any(axis=-1)
+    return ~down
+
+
+def next_recovery(schedule: FaultSchedule, t, devices=None) -> Array:
+    """Earliest time >= t at which every (selected) device is up.
+
+    ``devices`` selects rows (default: all).  Returns ``t`` itself when
+    nothing is down.  Host-side recovery-wait logic uses this to jump
+    the virtual clock deterministically to the end of an outage instead
+    of spinning."""
+    start, end = schedule.outage_start, schedule.outage_end
+    if devices is not None:
+        idx = jnp.asarray(devices, jnp.int32)
+        start, end = start[idx], end[idx]
+    t = jnp.asarray(t, jnp.float32)
+    covering = (t >= start) & (t < end)
+    return jnp.maximum(t, jnp.where(covering, end, -_INF).max())
+
+
+def outage_stall(schedule: FaultSchedule, t, devices) -> Array:
+    """Seconds a step starting at ``t`` on ``devices`` stalls before all
+    of them are back up (0.0 when none is down)."""
+    return next_recovery(schedule, t, devices) - jnp.asarray(t, jnp.float32)
+
+
+def degrade_scenario(sp, schedule: FaultSchedule):
+    """Fold the schedule's LINK degradation into a ``ScenarioParams``.
+
+    Hop ``k`` runs at ``hop_bandwidth_hz[k] * hop_bandwidth_scale[k]``
+    and pays ``hop_latency_s[k] + hop_latency_add_s[k]`` - the same
+    per-hop link model Eq. 10/11 already price, so ``plan_cost``,
+    ``score_plans``, the split oracle, and the transport tick model all
+    see one consistent degraded physics.  A ``fault_free`` schedule is a
+    bit-exact no-op.  Pure pytree arithmetic: scoring under degraded
+    scenarios reuses the fault-free compiled traces.
+    """
+    from repro.core.scenario import scale_param, shift_param
+
+    h = sp.hop_bandwidth_hz.shape[-1]
+    if schedule.num_hops != h:
+        raise ValueError(
+            f"schedule has {schedule.num_hops} hops, scenario has {h}")
+    sp = scale_param(sp, "hop_bandwidth_hz", schedule.hop_bandwidth_scale)
+    return shift_param(sp, "hop_latency_s", schedule.hop_latency_add_s)
+
+
+# ---------------------------------------------------------------------------
+# the tick <-> schedule-time mapping
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FaultClock:
+    """Maps executor ticks / serving virtual time onto the schedule.
+
+    ``tick_seconds > 0``: schedule time is ``tick * tick_seconds`` -
+    fully deterministic, independent of host wall-clock (what the chaos
+    tests and the reference benchmark schedule use).  ``tick_seconds ==
+    0``: schedule time is the caller-supplied virtual ``now`` (the
+    serving loop's arrival clock), for wall-coupled injection.
+    """
+
+    tick_seconds: float = 0.0
+
+    def time_of(self, tick: int, now: float = 0.0) -> float:
+        if self.tick_seconds > 0:
+            return tick * self.tick_seconds
+        return now
+
+    def ticks_until(self, t_now: float, t_target: float) -> int:
+        """Whole ticks from ``t_now`` until ``t_target`` has passed
+        (minimum 1; only meaningful for tick-driven clocks)."""
+        if self.tick_seconds <= 0:
+            return 1
+        import math
+
+        return max(int(math.ceil((t_target - t_now) / self.tick_seconds)), 1)
+
+
+__all__ = [
+    "FaultClock",
+    "FaultSchedule",
+    "degrade_scenario",
+    "device_up",
+    "fault_free",
+    "make_schedule",
+    "next_recovery",
+    "outage_stall",
+    "reference_schedule",
+    "sample_fault_schedule",
+]

@@ -144,6 +144,23 @@ def replace_param(base: ScenarioParams, name: str, value) -> ScenarioParams:
     return base._replace(**{name: val})
 
 
+def scale_param(base: ScenarioParams, name: str, scale) -> ScenarioParams:
+    """Multiplicative sibling of :func:`replace_param`: scale one field
+    elementwise (broadcast against the field's shape), keeping its dtype.
+    Degradation sweeps (``core.faults.degrade_scenario``) ride this so a
+    faulted scenario stays the same pytree structure as the base one."""
+    ref = getattr(base, name)
+    val = ref * jnp.asarray(scale, ref.dtype)
+    return base._replace(**{name: val.astype(ref.dtype)})
+
+
+def shift_param(base: ScenarioParams, name: str, delta) -> ScenarioParams:
+    """Additive sibling of :func:`replace_param` (see :func:`scale_param`)."""
+    ref = getattr(base, name)
+    val = ref + jnp.asarray(delta, ref.dtype)
+    return base._replace(**{name: val.astype(ref.dtype)})
+
+
 def with_active_eaves(base: ScenarioParams, count: int) -> ScenarioParams:
     """Scenario with only the first ``count`` eavesdroppers active: their
     mask is 1, the rest are padding (zero monitoring, zero observation)."""

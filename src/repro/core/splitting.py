@@ -216,6 +216,21 @@ def even_boundaries(num_layers: int, s: int) -> Tuple[int, ...]:
     return tuple(out)
 
 
+def plan_devices_up(devices, device_mask):
+    """Per-plan survivability under a device up/down mask.
+
+    ``devices`` is an ``(..., S)`` device-assignment batch (or a single
+    ``(S,)`` assignment), ``device_mask`` a ``(U+1,)`` bool/float mask
+    (1 = up).  Returns an ``(...,)`` bool: every stage of the plan sits
+    on an up device.  Runtime values throughout - masking out a failed
+    device never retraces the oracle - and the fast path the failure-
+    aware serving re-planner uses to route around dead devices.
+    """
+    devs = jnp.asarray(devices, jnp.int32)
+    up = jnp.asarray(device_mask).astype(bool)[devs]
+    return up.all(axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # vectorized plan scoring (the device-side oracle)
 # ---------------------------------------------------------------------------

@@ -84,6 +84,41 @@ def plan_transport_model(
     )
 
 
+def faulted_transport_model(
+    profile: LayerProfile,
+    plan: SplitPlan,
+    positions: np.ndarray,
+    p_tx: np.ndarray,
+    decoy_power: np.ndarray,
+    sp,
+    schedule,
+) -> TransportModel:
+    """Transport model under a :class:`repro.core.faults.FaultSchedule`.
+
+    Link degradation folds through ``faults.degrade_scenario`` BEFORE
+    the plan-cost breakdown - the same degraded ``ScenarioParams`` that
+    ``plan_cost``/``score_plans`` price, so the executor's delay
+    accounting under partial outage can never disagree with Eq. 10
+    (pinned at M=1 sync by ``tests/test_faults.py``).  Per-device
+    straggler factors then scale each stage's compute terms via the
+    plan's device assignment (Eqs. 8-9 run on the assigned device's
+    effective clock).  A ``fault_free`` schedule is a bit-exact no-op.
+    """
+    from repro.core.faults import degrade_scenario
+
+    model = plan_transport_model(profile, plan, positions, p_tx,
+                                 decoy_power, degrade_scenario(sp, schedule))
+    slow = np.asarray(schedule.compute_slowdown, np.float64)
+    devs = np.asarray(plan.devices, np.int64)
+    return TransportModel(
+        t_comp_fwd=model.t_comp_fwd * slow[devs],
+        t_comp_bwd=model.t_comp_bwd * slow[devs],
+        t_tx_fwd=model.t_tx_fwd,
+        t_tx_bwd=model.t_tx_bwd,
+        hop_latency=model.hop_latency,
+    )
+
+
 def tick_costs(model: TransportModel, m: int):
     """Per-tick (compute, transport) seconds of the 1F1B schedule.
 
@@ -157,3 +192,34 @@ def simulate_1f1b(model: TransportModel, m: int, *,
         "per_tick_s": per_tick,
         "bubble_fraction": 1.0 - active_slots / (2.0 * s * n_ticks),
     }
+
+
+def simulate_1f1b_faulted(model: TransportModel, m: int, schedule, devices,
+                          *, transport: str = "overlap",
+                          t_start: float = 0.0) -> dict:
+    """:func:`simulate_1f1b` under outage windows.
+
+    ``devices`` is the plan's stage -> device assignment; a tick whose
+    start time falls inside any assigned device's outage window STALLS
+    until the last such device recovers (the executor retries the hop /
+    block until its peer is back), then pays its normal cost.  Per-tick
+    costs should come from a :func:`faulted_transport_model` so link
+    degradation and stragglers are already priced in.  Returns the
+    :func:`simulate_1f1b` dict plus ``stall_s`` / ``per_tick_stall_s``;
+    a ``fault_free`` schedule reproduces :func:`simulate_1f1b` exactly.
+    """
+    from repro.core import faults as F
+
+    base = simulate_1f1b(model, m, transport=transport)
+    per_tick = np.asarray(base["per_tick_s"], np.float64)
+    devs = np.asarray(devices, np.int64)
+    stalls = np.zeros_like(per_tick)
+    t = float(t_start)
+    for i, cost in enumerate(per_tick):
+        stalls[i] = float(F.outage_stall(schedule, t, devs))
+        t += stalls[i] + float(cost)
+    out = dict(base)
+    out["per_tick_stall_s"] = stalls
+    out["stall_s"] = float(stalls.sum())
+    out["total_s"] = float(per_tick.sum() + stalls.sum())
+    return out

@@ -23,8 +23,8 @@ Layout:
 from repro.serving.batching import (decode_python_loop, generate_reference,
                                     generate_static, sample_token)
 from repro.serving.config import ServeConfig
-from repro.serving.engine import (EngineState, init_engine_state,
-                                  make_engine_step)
+from repro.serving.engine import (EngineState, evict_slots,
+                                  init_engine_state, make_engine_step)
 from repro.serving.replanner import OnlineReplanner
 from repro.serving.runners import PipelineRunner, SingleDeviceRunner
 from repro.serving.service import (Request, RequestQueue, ServingService,
@@ -33,7 +33,7 @@ from repro.serving.service import (Request, RequestQueue, ServingService,
 __all__ = [
     "EngineState", "OnlineReplanner", "PipelineRunner", "Request",
     "RequestQueue", "ServeConfig", "ServingService", "SingleDeviceRunner",
-    "SlotScheduler", "decode_python_loop", "generate_reference",
-    "generate_static", "init_engine_state", "make_engine_step",
-    "poisson_trace", "sample_token",
+    "SlotScheduler", "decode_python_loop", "evict_slots",
+    "generate_reference", "generate_static", "init_engine_state",
+    "make_engine_step", "poisson_trace", "sample_token",
 ]

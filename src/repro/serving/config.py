@@ -48,6 +48,17 @@ class ServeConfig:
     # ticks (0 = off). Re-plans are recorded, not applied mid-flight
     # (cache migration between stages is out of scope).
     replan_every: int = 0
+    # failure handling (active when a FaultSchedule is passed to run()):
+    # deadline_s is the default per-request completion budget after
+    # arrival (0 = no deadline; Request.deadline overrides); a failed
+    # tick retries up to max_retries times with exponential backoff
+    # starting at retry_backoff_s before evicting in-flight slots;
+    # fault_tick_s > 0 drives the FaultClock deterministically
+    # (schedule time = tick * fault_tick_s, independent of wall clock).
+    deadline_s: float = 0.0
+    max_retries: int = 3
+    retry_backoff_s: float = 0.01
+    fault_tick_s: float = 0.0
 
     def model_config(self):
         import importlib

@@ -83,6 +83,26 @@ def init_engine_state(runner, num_slots: int, prompt_pad: int,
     return state
 
 
+def evict_slots(state: EngineState, mask) -> EngineState:
+    """Free the masked slots WITHOUT touching their caches.
+
+    The host calls this between engine ticks when the device carrying a
+    stage dies: the in-flight requests are requeued and their slots
+    handed back to the admitter. Caches are left stale on purpose - the
+    finite-garbage invariant (module docstring) makes masked stale rows
+    a bitwise no-op, exactly as after a normal completion, so eviction
+    cannot perturb the tokens of requests it never touched. Plain slot
+    bookkeeping on fixed shapes: the next engine step reuses the same
+    compiled trace.
+    """
+    mask = jnp.asarray(mask, bool)
+    return state._replace(
+        active=state.active & ~mask,
+        req_id=jnp.where(mask, jnp.int32(-1), state.req_id),
+        n_gen=jnp.where(mask, jnp.int32(0), state.n_gen),
+    )
+
+
 def make_engine_step(runner, *, num_slots: int, arrival_slots: int,
                      prompt_pad: int, max_new: int, decode_chunk: int = 8,
                      temperature: float = 0.0, base_key=None,

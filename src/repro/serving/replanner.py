@@ -9,6 +9,14 @@ shifted :class:`repro.core.scenario.ScenarioParams` - zero recompiles,
 because ``ScenarioParams`` is a runtime pytree (the same property the
 scenario-sweep training tests pin).
 
+Failure-aware degradation: ``replan(..., exclude_devices=...)`` marks
+every plan whose assignment touches an excluded (dead) device
+infeasible via the oracle's ``device_mask`` runtime arg, and scores
+alternate device assignments (``candidate_assignments="rotations"``) so
+the service can route AROUND the failed device instead of merely
+rejecting its plans. Assignment candidates all share the oracle's
+shapes, so fault recovery still costs one compiled trace.
+
 Re-plans are DECISIONS, not live migrations: the engine keeps serving on
 its current plan (moving per-stage KV rings between devices mid-request
 is out of scope), and the recorded decisions drive plan switches at
@@ -16,7 +24,7 @@ request boundaries / restarts.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -29,11 +37,20 @@ class OnlineReplanner:
     per-hop bandwidth down by ``bandwidth_sensitivity * load`` (a busier
     box serves each hop a thinner share) and the energy budget down by
     ``energy_drain`` per replan call (batteries only drain).
+
+    ``candidate_assignments`` controls the stage -> device assignments
+    scored per replan: ``None`` keeps the single canonical ring (first
+    S-1 stages on trainers 0..S-2, last on the server) - the static
+    serving default; ``"rotations"`` scores all U rotations of the
+    trainer ring (server stage fixed), giving the replanner somewhere to
+    go when a trainer dies; an explicit sequence of device tuples is
+    used as-is.
     """
 
     def __init__(self, env, *, scenario=None,
                  bandwidth_sensitivity: float = 0.5,
-                 energy_drain: float = 0.0, seed: int = 0):
+                 energy_drain: float = 0.0, seed: int = 0,
+                 candidate_assignments=None):
         self.env = env
         self.oracle = env.make_split_oracle()
         self.base = env._params(scenario)
@@ -48,8 +65,25 @@ class OnlineReplanner:
         state = env.reset(key, self.base)
         self.dev_pos = state.dev_pos
         # first S-1 stages on trainer devices, last on the server (index U)
-        self.devices = jnp.asarray(tuple(range(env.S - 1)) + (env.U,),
-                                   jnp.int32)
+        canonical = tuple(range(env.S - 1)) + (env.U,)
+        if candidate_assignments is None:
+            assignments = [canonical]
+        elif candidate_assignments == "rotations":
+            assignments = [
+                tuple((j + i) % env.U for i in range(env.S - 1)) + (env.U,)
+                for j in range(env.U)
+            ]
+        else:
+            assignments = [tuple(int(d) for d in a)
+                           for a in candidate_assignments]
+            if not assignments:
+                raise ValueError("candidate_assignments is empty")
+            for a in assignments:
+                if len(a) != env.S:
+                    raise ValueError(
+                        f"assignment {a} has {len(a)} stages, env has {env.S}")
+        self.assignments: Tuple[Tuple[int, ...], ...] = tuple(assignments)
+        self.devices = jnp.asarray(self.assignments[0], jnp.int32)
         self.p_tx = jnp.full((env.S - 1,), self.base.power_levels[0])
         self.decoy_power = jnp.zeros((env.S - 1, env.U + 1))
 
@@ -61,27 +95,82 @@ class OnlineReplanner:
             gamma_e=self.base.gamma_e * max(1.0 - self._drained, 1e-3),
         )
 
-    def replan(self, *, load: float, scenario=None) -> Dict:
-        """Score all plans under the shifted scenario; pick the feasible
-        min-delay plan. Returns a plain-host decision record."""
+    def _device_mask(self, exclude_devices: Iterable[int]):
+        """(U+1,) up-mask with the excluded rows down (None when empty)."""
+        excl = sorted({int(d) for d in exclude_devices})
+        if not excl:
+            return None
+        mask = np.ones((self.env.U + 1,), bool)
+        for d in excl:
+            if not 0 <= d <= self.env.U:
+                raise ValueError(
+                    f"excluded device {d} not in [0, {self.env.U}]")
+            mask[d] = False
+        return jnp.asarray(mask)
+
+    def replan(self, *, load: float, scenario=None,
+               exclude_devices: Sequence[int] = ()) -> Dict:
+        """Score all plans x candidate assignments under the shifted
+        scenario; pick the feasible min-delay plan. Assignments whose
+        trainer stages touch an excluded device are skipped outright
+        (their every plan is infeasible by construction); the oracle's
+        ``device_mask`` enforces the same exclusion in-band so the result
+        equals fresh scoring over the masked plan set. Returns a
+        plain-host decision record."""
         sp = scenario if scenario is not None else self.shifted_scenario(load)
         self._drained += self.energy_drain
-        out = self.oracle(self.dev_pos, self.devices, self.p_tx,
-                          self.decoy_power, sp)
-        delay = np.asarray(out["delay"])
-        feas = np.asarray(out["feasible"])
-        bounds = np.asarray(out["boundaries"])
-        masked = np.where(feas, delay, np.inf)
-        best = int(np.argmin(masked))
-        return {
-            "boundaries": tuple(int(b) for b in bounds[best]),
-            "delay": float(delay[best]),
-            "energy": float(np.asarray(out["energy"])[best]),
-            "feasible": bool(feas[best]),
-            "any_feasible": bool(feas.any()),
+        mask = self._device_mask(exclude_devices)
+        excl = frozenset(int(d) for d in exclude_devices)
+        best: Optional[Dict] = None
+        any_feasible = False
+        num_plans = 0
+        for assign in self.assignments:
+            if excl and excl.intersection(assign):
+                continue
+            devices = jnp.asarray(assign, jnp.int32)
+            out = self.oracle(self.dev_pos, devices, self.p_tx,
+                              self.decoy_power, sp, device_mask=mask)
+            delay = np.asarray(out["delay"])
+            feas = np.asarray(out["feasible"])
+            bounds = np.asarray(out["boundaries"])
+            num_plans += int(bounds.shape[0])
+            any_feasible = any_feasible or bool(feas.any())
+            masked = np.where(feas, delay, np.inf)
+            i = int(np.argmin(masked))
+            cand = {
+                "boundaries": tuple(int(b) for b in bounds[i]),
+                "devices": assign,
+                "delay": float(delay[i]),
+                "energy": float(np.asarray(out["energy"])[i]),
+                "feasible": bool(feas[i]),
+                "key": float(masked[i]),
+            }
+            if best is None or cand["key"] < best["key"]:
+                best = cand
+        if best is None:  # every assignment intersected the exclusion set
+            best = {
+                "boundaries": tuple(int(b)
+                                    for b in np.asarray(
+                                        self.oracle(
+                                            self.dev_pos, self.devices,
+                                            self.p_tx, self.decoy_power, sp,
+                                            device_mask=mask,
+                                        )["boundaries"])[0]),
+                "devices": self.assignments[0],
+                "delay": float("inf"),
+                "energy": float("inf"),
+                "feasible": False,
+                "key": float("inf"),
+            }
+            num_plans = 0
+        best.pop("key", None)
+        best.update({
+            "any_feasible": any_feasible,
             "load": float(load),
-            "num_plans": int(bounds.shape[0]),
-        }
+            "num_plans": num_plans,
+            "excluded": tuple(sorted(excl)),
+        })
+        return best
 
     @property
     def trace_count(self):

@@ -27,6 +27,11 @@ class Request:
     prompt: np.ndarray            # (plen,) int32
     gen_target: int
     arrival_time: float = 0.0     # seconds from trace start
+    # absolute trace-time completion deadline; inf = none. A request
+    # still QUEUED past its deadline is dropped (reported under
+    # ``expired``) instead of admitted - under faults an evicted request
+    # re-enters the queue and can expire there too.
+    deadline: float = float("inf")
 
     @property
     def plen(self) -> int:
@@ -58,7 +63,29 @@ class RequestQueue:
             self._ready.append(self._future.pop(0))
 
     def pop(self, k: int) -> List[Request]:
-        return [self._ready.popleft() for _ in range(min(k, len(self._ready)))]
+        k = max(min(int(k), len(self._ready)), 0)  # k <= 0 pops nothing
+        return [self._ready.popleft() for _ in range(k)]
+
+    def peek(self, k: int) -> List[Request]:
+        """First ``k`` ready requests WITHOUT removing them (the
+        scheduler validates before it pops, so a rejection never loses
+        queued requests)."""
+        k = max(min(int(k), len(self._ready)), 0)
+        return [self._ready[i] for i in range(k)]
+
+    def requeue_front(self, reqs: List[Request]) -> None:
+        """Put evicted in-flight requests back at the HEAD of the queue
+        (in the given order) so recovery re-admits them before newer
+        arrivals."""
+        self._ready.extendleft(reversed(reqs))
+
+    def drop_expired(self, now: float) -> List[Request]:
+        """Remove (and return) ready requests past their deadline."""
+        expired = [r for r in self._ready if r.deadline <= now]
+        if expired:
+            dead = {id(r) for r in expired}
+            self._ready = deque(r for r in self._ready if id(r) not in dead)
+        return expired
 
     @property
     def pending(self) -> int:
@@ -80,17 +107,24 @@ class SlotScheduler:
         self.p = prompt_pad
 
     def pack(self, queue: RequestQueue, free_slots: int):
-        """-> (admitted requests, prompt (A,P), plen, gen, rid, n_arr)."""
-        reqs = queue.pop(min(self.a, free_slots))
+        """-> (admitted requests, prompt (A,P), plen, gen, rid, n_arr).
+
+        Rejection is TOTAL: candidates are validated by peek before any
+        is popped, so an oversized prompt raises with the queue intact
+        (nothing admitted, nothing lost).
+        """
+        reqs = queue.peek(min(self.a, free_slots))
+        for r in reqs:
+            if r.plen > self.p:
+                raise ValueError(
+                    f"request {r.rid} prompt length {r.plen} exceeds "
+                    f"prompt_pad {self.p}")
+        reqs = queue.pop(len(reqs))
         ap = np.zeros((self.a, self.p), np.int32)
         al = np.ones((self.a,), np.int32)
         ag = np.ones((self.a,), np.int32)
         ar = np.full((self.a,), -1, np.int32)
         for i, r in enumerate(reqs):
-            if r.plen > self.p:
-                raise ValueError(
-                    f"request {r.rid} prompt length {r.plen} exceeds "
-                    f"prompt_pad {self.p}")
             ap[i, :r.plen] = r.prompt
             al[i] = r.plen
             ag[i] = r.gen_target
@@ -146,12 +180,16 @@ class ServingService:
         self.state = init_engine_state(
             self.runner, cfg.num_slots, cfg.prompt_pad, cfg.max_new)
         self.replanner = None  # attach via attach_replanner()
+        # devices the serving pipeline occupies, as FaultSchedule rows:
+        # one per stage for split serving, device 0 standalone
+        self.stage_devices = (tuple(range(len(cfg.boundaries)))
+                              if cfg.boundaries else (0,))
 
     def attach_replanner(self, replanner) -> None:
         self.replanner = replanner
 
     def run(self, trace: List[Request], *, realtime: bool = False,
-            max_ticks: int = 100_000) -> Dict:
+            max_ticks: int = 100_000, faults=None) -> Dict:
         """Serve ``trace`` to completion; returns results + metrics.
 
         ``realtime=False`` (benchmark mode) treats arrival times as a
@@ -159,24 +197,77 @@ class ServingService:
         otherwise idle - arrivals still gate admission ORDER, but the
         engine never sleeps, so throughput comparisons are
         compute-bound. ``realtime=True`` sleeps until the next arrival.
+
+        ``faults`` is an optional :class:`repro.core.faults.FaultSchedule`
+        covering the service's ``stage_devices``. A tick whose fault-clock
+        time (``cfg.fault_tick_s > 0``: deterministic ``tick *
+        fault_tick_s``; else the virtual arrival clock) lands inside an
+        assigned device's outage window is a FAILED tick: the engine is
+        not dispatched, the service retries with bounded exponential
+        backoff (``cfg.max_retries`` / ``cfg.retry_backoff_s``), and if
+        the device is still down it evicts every in-flight slot
+        (``engine.evict_slots``), requeues those requests at the queue
+        head, re-plans around the dead devices
+        (``replan(exclude_devices=...)``), and jumps the clock to the
+        outage's end. Requests the outage never touched complete with
+        bitwise-identical tokens to a fault-free run (rid-keyed sampling;
+        pinned by ``tests/test_chaos.py``), and injection adds zero
+        engine retraces.
         """
         import jax
         import jax.numpy as jnp
 
-        queue = RequestQueue(list(trace))
+        from repro.core import faults as F
+        from repro.serving.engine import evict_slots
+
+        trace = list(trace)
+        if self.cfg.deadline_s > 0:
+            import dataclasses
+
+            trace = [dataclasses.replace(
+                r, deadline=min(r.deadline,
+                                r.arrival_time + self.cfg.deadline_s))
+                for r in trace]
+        queue = RequestQueue(trace)
         sched = SlotScheduler(self.cfg.arrival_slots, self.cfg.prompt_pad)
+        clock = F.FaultClock(self.cfg.fault_tick_s)
+        if faults is not None:
+            # host-side numpy mirrors of faults.device_up /
+            # faults.next_recovery: the SAME half-open window arithmetic
+            # (pinned against the jnp versions by tests/test_chaos.py)
+            # without paying a per-tick XLA dispatch + first-call compile
+            # inside the timed service loop
+            f_start = np.asarray(faults.outage_start, np.float32)
+            f_end = np.asarray(faults.outage_end, np.float32)
+            f_stage = np.asarray(self.stage_devices, np.int64)
+
+            def _f_up(t):
+                t = np.float32(t)
+                return ~(((t >= f_start) & (t < f_end)).any(axis=-1))
+
+            def _f_recovery(t):
+                t = np.float32(t)
+                cov = (t >= f_start[f_stage]) & (t < f_end[f_stage])
+                if not cov.any():
+                    return float(t)
+                return float(max(t, np.where(cov, f_end[f_stage],
+                                             -np.inf).max()))
         admit_t: Dict[int, float] = {}
         arrive_t = {r.rid: r.arrival_time for r in trace}
         completions: List[Completion] = []
         seen_done = set()
+        inflight: Dict[int, Request] = {}
+        expired: List[Request] = []
         t0 = time.perf_counter()
         free = self.cfg.num_slots
         active_rids: set = set()
         replans = []
+        fault_events = retries = evictions = recovery_ticks = 0
         tick = 0
         while tick < max_ticks:
             now = time.perf_counter() - t0
             queue.advance(now)
+            expired.extend(queue.drop_expired(now))
             if queue.pending == 0 and not active_rids:
                 if queue.exhausted:
                     break
@@ -187,10 +278,67 @@ class ServingService:
                 else:
                     t0 -= max(nxt - now, 0.0)
                 queue.advance(time.perf_counter() - t0)
+                expired.extend(queue.drop_expired(time.perf_counter() - t0))
+                if queue.pending == 0 and not active_rids:
+                    # early wake / all arrivals expired: nothing to do,
+                    # skip the engine dispatch instead of burning a
+                    # no-op step (the realtime busy-loop fix)
+                    tick += 1
+                    continue
+            if faults is not None:
+                now = time.perf_counter() - t0
+                t_f = clock.time_of(tick, now)
+                up = _f_up(t_f)
+                down = [d for d in self.stage_devices if not up[d]]
+                if down:
+                    fault_events += 1
+                    # bounded exponential backoff before giving up
+                    t_probe, backoff = t_f, self.cfg.retry_backoff_s
+                    recovered = False
+                    for _ in range(max(self.cfg.max_retries, 0)):
+                        retries += 1
+                        t_probe += backoff
+                        backoff *= 2.0
+                        probe_up = _f_up(t_probe)
+                        if all(probe_up[d] for d in self.stage_devices):
+                            recovered = True
+                            break
+                    if not recovered:
+                        # give up on this outage: free every in-flight
+                        # slot (the pipeline spans all stage devices),
+                        # requeue its requests at the head, and route
+                        # re-planning around the dead devices
+                        victims = sorted(
+                            (inflight[r] for r in active_rids if r in inflight),
+                            key=lambda r: (r.arrival_time, r.rid))
+                        if victims:
+                            evictions += len(victims)
+                            queue.requeue_front(victims)
+                            self.state = evict_slots(
+                                self.state, np.asarray(self.state.active))
+                            active_rids = set()
+                            free = self.cfg.num_slots
+                        if self.replanner is not None:
+                            occupancy = 0.0
+                            replans.append(self.replanner.replan(
+                                load=occupancy, exclude_devices=down))
+                        t_probe = _f_recovery(t_probe)
+                    # stall to the recovery point: charge it to the
+                    # clock and advance the fault clock past it
+                    stall = max(t_probe - t_f, 0.0)
+                    if realtime:
+                        time.sleep(stall)
+                    else:
+                        t0 -= stall
+                    skipped = clock.ticks_until(t_f, t_probe)
+                    recovery_ticks += skipped
+                    tick += skipped
+                    continue
             reqs, ap, al, ag, ar, n_arr = sched.pack(queue, free)
             now = time.perf_counter() - t0
             for r in reqs:
                 admit_t[r.rid] = now
+                inflight[r.rid] = r
             self.state, report = self._jstep(
                 self.params, self.state, jnp.asarray(ap), jnp.asarray(al),
                 jnp.asarray(ag), jnp.asarray(ar), jnp.int32(n_arr))
@@ -207,6 +355,7 @@ class ServingService:
                 for s in done_slots:
                     rid = int(rids[s])
                     seen_done.add(rid)
+                    inflight.pop(rid, None)
                     completions.append(Completion(
                         rid=rid, tokens=buf[s, :ngen[s]].copy(),
                         arrival_time=arrive_t[rid],
@@ -218,16 +367,22 @@ class ServingService:
                 replans.append(self.replanner.replan(load=occupancy))
             tick += 1
         wall = time.perf_counter() - t0
-        return self._metrics(completions, wall, tick, replans)
+        return self._metrics(completions, wall, tick, replans,
+                             expired=expired, fault_events=fault_events,
+                             retries=retries, evictions=evictions,
+                             recovery_ticks=recovery_ticks)
 
     def _metrics(self, completions: List[Completion], wall: float,
-                 ticks: int, replans) -> Dict:
+                 ticks: int, replans, *, expired=(), fault_events: int = 0,
+                 retries: int = 0, evictions: int = 0,
+                 recovery_ticks: int = 0) -> Dict:
         lats = sorted(c.latency for c in completions)
         total_tokens = int(sum(len(c.tokens) for c in completions))
         busy = float(self.state.busy_steps)
         steps = float(self.state.decode_steps)
+        # empty-trace runs report 0.0, not NaN (NaN poisons JSON gates)
         pct = (lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]
-               if lats else float("nan"))
+               if lats else 0.0)
         return {
             "completions": {c.rid: c.tokens for c in completions},
             "latencies": {c.rid: c.latency for c in completions},
@@ -243,6 +398,12 @@ class ServingService:
             "slot_occupancy": busy / (steps * self.cfg.num_slots)
             if steps else 0.0,
             "replans": replans,
+            # failure accounting (all zero on fault-free runs)
+            "expired": sorted(r.rid for r in expired),
+            "fault_events": fault_events,
+            "retries": retries,
+            "evictions": evictions,
+            "recovery_ticks": recovery_ticks,
         }
 
 

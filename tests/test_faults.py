@@ -1,0 +1,329 @@
+"""Fault schedule semantics + the Eq. 10 consistency of faulted costs.
+
+The contracts pinned here:
+
+* schedules are REPLAYABLE: same key -> bit-identical schedule; queries
+  are pure and respect half-open windows;
+* ``degrade_scenario`` with a ``fault_free`` schedule is a bit-exact
+  no-op, and fault injection never retraces the plan scorer (the
+  schedule is a runtime pytree, same contract as ``ScenarioParams``);
+* the faulted transport model at M=1 sync equals ``plan_cost`` under
+  the DEGRADED scenario to 1e-12 - the executor's delay accounting
+  under partial outage and the Eq. 10 oracle are the same number;
+* the split oracle's ``device_mask`` marks exactly the plans touching a
+  down device infeasible, and the replanner's ``exclude_devices`` path
+  equals fresh scoring over the surviving-device plan set through ONE
+  compiled trace.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import faults as F
+from repro.core.channel import NetworkConfig
+from repro.core.env import MHSLEnv
+from repro.core.profiles import resnet101_profile
+from repro.core.scenario import scenario_from_net
+from repro.core.splitting import (SplitPlan, make_plan_scorer, plan_cost,
+                                  plan_devices_up)
+from repro.core.transport import (faulted_transport_model,
+                                  plan_transport_model, simulate_1f1b,
+                                  simulate_1f1b_faulted)
+
+
+@pytest.fixture(scope="module")
+def env():
+    return MHSLEnv(profile=resnet101_profile(batch=1))
+
+
+def _setup(s, *, num_devices=8):
+    net = NetworkConfig(num_devices=num_devices, max_split=max(s, 4),
+                        hop_bandwidth=tuple(1e6 / (k + 1)
+                                            for k in range(max(s, 4) - 1)),
+                        hop_latency=1e-3)
+    prof = resnet101_profile(batch=1)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, net.area_m, (net.num_devices + 1, 2))
+    devices = tuple(range(s - 1)) + (net.num_devices,)
+    bounds = tuple(int(b) for b in np.linspace(4, prof.num_layers, s))
+    plan = SplitPlan(bounds, devices)
+    p_tx = np.full(s - 1, 0.5)
+    decoy = np.zeros((s - 1, net.num_devices + 1))
+    decoy[:, -1] = 0.1
+    return prof, plan, pos, p_tx, decoy, net
+
+
+# ---------------------------------------------------------------------------
+# schedule construction + replay
+
+
+def test_sampled_schedule_is_replayable():
+    kw = dict(num_devices=5, num_hops=3, horizon_s=2.0, num_windows=2,
+              outage_prob=0.5, outage_len_s=(0.1, 0.4),
+              bandwidth_scale=(0.5, 0.9), slowdown=(1.0, 2.0))
+    a = F.sample_fault_schedule(jax.random.PRNGKey(7), **kw)
+    b = F.sample_fault_schedule(jax.random.PRNGKey(7), **kw)
+    c = F.sample_fault_schedule(jax.random.PRNGKey(8), **kw)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert jnp.array_equal(x, y)
+    assert any(not jnp.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(c)))
+    assert a.num_devices == 5 and a.num_hops == 3 and a.num_windows == 2
+
+
+def test_make_schedule_validation():
+    with pytest.raises(ValueError, match="not in"):
+        F.make_schedule(2, 1, outages=[(5, 0.0, 1.0)])
+    with pytest.raises(ValueError, match="empty"):
+        F.make_schedule(2, 1, outages=[(0, 1.0, 1.0)])
+    with pytest.raises(ValueError, match="num_windows"):
+        F.make_schedule(2, 1, outages=[(0, 0.0, 1.0), (0, 2.0, 3.0)],
+                        num_windows=1)
+
+
+def test_device_up_half_open_windows_and_recovery():
+    s = F.make_schedule(3, 2, outages=[(0, 1.0, 2.0), (0, 3.0, 4.0),
+                                       (1, 1.5, 2.5)])
+    up = lambda t: np.asarray(F.device_up(s, t))
+    assert up(0.99).tolist() == [True, True, True]
+    assert up(1.0).tolist() == [False, True, True]    # start is inclusive
+    assert up(1.75).tolist() == [False, False, True]
+    assert up(2.0).tolist() == [True, False, True]    # end is exclusive
+    assert up(3.5).tolist() == [False, True, True]    # second window
+    # recovery: max over covering windows' ends, identity when all up
+    assert float(F.next_recovery(s, 1.75, np.array([0, 1]))) == 2.5
+    assert float(F.next_recovery(s, 0.5, np.array([0, 1]))) == 0.5
+    assert float(F.outage_stall(s, 1.0, np.array([0]))) == pytest.approx(1.0)
+    assert float(F.outage_stall(s, 0.0, np.array([2]))) == 0.0
+
+
+def test_fault_clock_mapping():
+    tickc = F.FaultClock(tick_seconds=0.02)
+    assert tickc.time_of(5, now=99.0) == pytest.approx(0.1)
+    assert tickc.ticks_until(0.08, 0.18) == 5
+    assert tickc.ticks_until(0.08, 0.08) == 1   # always progress
+    wallc = F.FaultClock()
+    assert wallc.time_of(5, now=99.0) == 99.0
+    assert wallc.ticks_until(0.0, 10.0) == 1
+
+
+# ---------------------------------------------------------------------------
+# scenario degradation
+
+
+def test_degrade_fault_free_is_bit_exact_noop(env):
+    sp = env._params(None)
+    sched = F.fault_free(env.U + 1, env.S - 1)
+    sp2 = F.degrade_scenario(sp, sched)
+    for a, b in zip(jax.tree.leaves(sp), jax.tree.leaves(sp2)):
+        assert jnp.array_equal(a, b)
+
+
+def test_degrade_scenario_hop_count_mismatch(env):
+    sp = env._params(None)
+    with pytest.raises(ValueError, match="hops"):
+        F.degrade_scenario(sp, F.fault_free(env.U + 1, env.S))
+
+
+def test_degrade_scenario_scales_links(env):
+    sp = env._params(None)
+    h = env.S - 1
+    sched = F.make_schedule(env.U + 1, h,
+                            hop_bandwidth_scale=[0.5] * h,
+                            hop_latency_add_s=[1e-3] * h)
+    sp2 = F.degrade_scenario(sp, sched)
+    np.testing.assert_allclose(np.asarray(sp2.hop_bandwidth_hz),
+                               np.asarray(sp.hop_bandwidth_hz) * 0.5)
+    np.testing.assert_allclose(np.asarray(sp2.hop_latency_s),
+                               np.asarray(sp.hop_latency_s) + 1e-3,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10 consistency of the faulted executor accounting
+
+
+@pytest.mark.parametrize("s", [2, 4])
+def test_faulted_m1_sync_matches_plan_cost_under_degraded_scenario(s):
+    """The faulted transport model's M=1 synchronous wall time equals the
+    Eq. 10 delay computed from the DEGRADED scenario - the executor and
+    the plan oracle price a partial outage identically."""
+    prof, plan, pos, p_tx, decoy, net = _setup(s)
+    sp = scenario_from_net(net)
+    sched = F.make_schedule(
+        net.num_devices + 1, max(s, 4) - 1,
+        hop_bandwidth_scale=[0.7] * (max(s, 4) - 1),
+        hop_latency_add_s=[2e-3] * (max(s, 4) - 1))
+    t_ref, _ = plan_cost(prof, plan, pos, p_tx, decoy,
+                         F.degrade_scenario(sp, sched))
+    model = faulted_transport_model(prof, plan, pos, p_tx, decoy, sp, sched)
+    sim = simulate_1f1b(model, 1, transport="sync")
+    np.testing.assert_allclose(sim["total_s"], float(t_ref), rtol=1e-12)
+
+
+def test_faulted_model_fault_free_is_exact(env):
+    prof, plan, pos, p_tx, decoy, net = _setup(4)
+    sp = scenario_from_net(net)
+    sched = F.fault_free(net.num_devices + 1, 3)
+    base = plan_transport_model(prof, plan, pos, p_tx, decoy, sp)
+    faulted = faulted_transport_model(prof, plan, pos, p_tx, decoy, sp, sched)
+    for f in ("t_comp_fwd", "t_comp_bwd", "t_tx_fwd", "t_tx_bwd",
+              "hop_latency"):
+        np.testing.assert_array_equal(getattr(base, f), getattr(faulted, f))
+    # the faulted simulator under fault_free reproduces the base one
+    a = simulate_1f1b(base, 4)
+    b = simulate_1f1b_faulted(base, 4, sched, plan.devices)
+    assert b["total_s"] == a["total_s"] and b["stall_s"] == 0.0
+
+
+def test_straggler_scales_assigned_stage_compute():
+    prof, plan, pos, p_tx, decoy, net = _setup(4)
+    sp = scenario_from_net(net)
+    slow = [1.0] * (net.num_devices + 1)
+    slow[plan.devices[1]] = 3.0   # stage 1's device straggles
+    sched = F.make_schedule(net.num_devices + 1, 3, compute_slowdown=slow)
+    base = plan_transport_model(prof, plan, pos, p_tx, decoy, sp)
+    faulted = faulted_transport_model(prof, plan, pos, p_tx, decoy, sp, sched)
+    np.testing.assert_allclose(faulted.t_comp_fwd[1], base.t_comp_fwd[1] * 3.0)
+    np.testing.assert_array_equal(faulted.t_comp_fwd[[0, 2, 3]],
+                                  base.t_comp_fwd[[0, 2, 3]])
+    np.testing.assert_array_equal(faulted.t_tx_fwd, base.t_tx_fwd)
+
+
+def test_outage_stalls_add_exactly():
+    """An outage covering a mid-schedule tick stalls it to the window's
+    end; total = fault-free total + stall."""
+    prof, plan, pos, p_tx, decoy, net = _setup(3)
+    sp = scenario_from_net(net)
+    model = plan_transport_model(prof, plan, pos, p_tx, decoy, sp)
+    base = simulate_1f1b(model, 2, transport="sync")
+    per = np.asarray(base["per_tick_s"])
+    # window opening exactly at tick 1's start, on stage 0's device
+    t1 = float(per[0])
+    sched = F.make_schedule(net.num_devices + 1, 2,
+                            outages=[(plan.devices[0], t1, t1 + 0.5)])
+    sim = simulate_1f1b_faulted(model, 2, sched, plan.devices,
+                                transport="sync")
+    np.testing.assert_allclose(sim["per_tick_stall_s"][1], 0.5, rtol=1e-9)
+    np.testing.assert_allclose(sim["stall_s"], 0.5, rtol=1e-9)
+    np.testing.assert_allclose(sim["total_s"], base["total_s"] + 0.5,
+                               rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# zero-retrace fault injection + the oracle's device mask
+
+
+def test_fault_injection_adds_zero_retraces(env):
+    """Scoring under N different fault schedules (including stragglers
+    and link degradation) reuses ONE compiled scorer trace."""
+    oracle = env.make_split_oracle()
+    key = jax.random.PRNGKey(0)
+    state = env.reset(key, None)
+    devices = jnp.asarray(tuple(range(env.S - 1)) + (env.U,), jnp.int32)
+    p_tx = jnp.full((env.S - 1,), env._params(None).power_levels[0])
+    decoy = jnp.zeros((env.S - 1, env.U + 1))
+    sp = env._params(None)
+    outs = []
+    for i in range(4):
+        sched = F.sample_fault_schedule(
+            jax.random.PRNGKey(i), env.U + 1, env.S - 1, horizon_s=1.0,
+            bandwidth_scale=(0.4, 1.0), slowdown=(1.0, 2.0))
+        mask = F.device_up(sched, 0.0)
+        outs.append(oracle(state.dev_pos, devices, p_tx, decoy,
+                           F.degrade_scenario(sp, sched), device_mask=mask))
+    assert oracle.trace_count[0] == 1
+    # degradation is a real input: at least one sweep point moved delay
+    d0 = np.asarray(outs[0]["delay"])
+    assert any(not np.array_equal(np.asarray(o["delay"]), d0)
+               for o in outs[1:])
+
+
+def test_plan_devices_up_and_oracle_mask(env):
+    mask = np.ones(env.U + 1, bool)
+    mask[1] = False
+    up = plan_devices_up(np.asarray([[0, 1, 6], [0, 2, 6], [2, 3, 4]]),
+                         mask)
+    assert np.asarray(up).tolist() == [False, True, True]
+    # oracle: masking a device used by the canonical assignment kills
+    # every plan; masking an unused device changes nothing
+    oracle = env.make_split_oracle()
+    state = env.reset(jax.random.PRNGKey(0), None)
+    devices = jnp.asarray(tuple(range(env.S - 1)) + (env.U,), jnp.int32)
+    p_tx = jnp.full((env.S - 1,), env._params(None).power_levels[0])
+    decoy = jnp.zeros((env.S - 1, env.U + 1))
+    base = oracle(state.dev_pos, devices, p_tx, decoy)
+    unused = np.ones(env.U + 1, bool)
+    unused[env.S] = False   # not in the canonical assignment
+    same = oracle(state.dev_pos, devices, p_tx, decoy, device_mask=unused)
+    assert jnp.array_equal(base["feasible"], same["feasible"])
+    dead = np.ones(env.U + 1, bool)
+    dead[0] = False
+    out = oracle(state.dev_pos, devices, p_tx, decoy, device_mask=dead)
+    assert not bool(np.asarray(out["feasible"]).any())
+    assert oracle.trace_count[0] == 1
+
+
+def test_masked_replan_equals_fresh_scoring_one_trace(env):
+    """The acceptance-criterion proof: a replan excluding a dead device
+    equals an independent fresh scoring pass over the surviving-device
+    plan set (every rotation assignment not touching the dead device),
+    through ONE compiled trace."""
+    from repro.serving import OnlineReplanner
+
+    rp = OnlineReplanner(env, candidate_assignments="rotations")
+    dead = 0
+    dec = rp.replan(load=0.3, exclude_devices=[dead])
+    assert rp.trace_count[0] == 1
+    assert dead not in dec["devices"]
+    assert dec["excluded"] == (dead,)
+
+    # fresh scoring over the masked plan set, independent oracle
+    fresh = env.make_split_oracle()
+    sp = rp.shifted_scenario(0.3)
+    mask = np.ones(env.U + 1, bool)
+    mask[dead] = False
+    best_key, best = np.inf, None
+    surviving = [a for a in rp.assignments if dead not in a]
+    assert surviving and len(surviving) < len(rp.assignments)
+    n_plans = 0
+    for assign in surviving:
+        out = fresh(rp.dev_pos, jnp.asarray(assign, jnp.int32), rp.p_tx,
+                    rp.decoy_power, sp, device_mask=jnp.asarray(mask))
+        delay = np.asarray(out["delay"])
+        feas = np.asarray(out["feasible"])
+        n_plans += len(delay)
+        masked = np.where(feas, delay, np.inf)
+        i = int(np.argmin(masked))
+        if masked[i] < best_key or best is None:
+            best_key = masked[i]
+            best = (tuple(int(b)
+                          for b in np.asarray(out["boundaries"])[i]),
+                    assign, float(delay[i]))
+    assert dec["num_plans"] == n_plans
+    assert dec["boundaries"] == best[0]
+    assert dec["devices"] == best[1]
+    assert dec["delay"] == best[2]
+
+
+def test_replan_default_assignment_unchanged(env):
+    """Back-compat: the default replanner (no candidate assignments, no
+    exclusion) produces the same decision record as before plus the new
+    bookkeeping fields."""
+    from repro.serving import OnlineReplanner
+
+    rp = OnlineReplanner(env)
+    dec = rp.replan(load=0.2)
+    assert dec["devices"] == tuple(range(env.S - 1)) + (env.U,)
+    assert dec["excluded"] == ()
+    fresh = env.make_split_oracle()
+    out = fresh(rp.dev_pos, rp.devices, rp.p_tx, rp.decoy_power,
+                rp.shifted_scenario(0.2))
+    delay = np.asarray(out["delay"])
+    feas = np.asarray(out["feasible"])
+    i = int(np.argmin(np.where(feas, delay, np.inf)))
+    assert dec["boundaries"] == tuple(
+        int(b) for b in np.asarray(out["boundaries"])[i])
+    assert dec["num_plans"] == len(delay)

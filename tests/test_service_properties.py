@@ -1,0 +1,122 @@
+"""Property tests for the host-side slot scheduler and request queue.
+
+The scheduler's contract (``SlotScheduler.pack``):
+
+* never admits more than ``min(arrival_slots, free_slots, pending)``;
+* never drops or duplicates a request - admitted + still-queued is
+  exactly the original queue, in order;
+* prompt-pad rejection is TOTAL: an oversized prompt raises before ANY
+  request is popped, so a rejected pack leaves the queue intact.
+
+Property tests run under hypothesis when installed; a seeded
+exhaustive-ish sweep alongside exercises the same invariants on boxes
+without it (same shim idiom as the other ``*_properties`` modules).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip, unit tests still run
+    from _hypothesis_compat import given, settings, st
+
+from repro.serving import Request, RequestQueue, SlotScheduler
+
+
+def _mk_queue(plens, now=1.0):
+    reqs = [Request(rid=i, prompt=np.full(pl, i + 1, np.int32),
+                    gen_target=2, arrival_time=0.0)
+            for i, pl in enumerate(plens)]
+    q = RequestQueue(reqs)
+    q.advance(now)
+    return q, reqs
+
+
+def _check_pack(plens, arrival_slots, prompt_pad, free_slots):
+    q, reqs = _mk_queue(plens)
+    sched = SlotScheduler(arrival_slots, prompt_pad)
+    oversized = [r for r in reqs[: max(min(arrival_slots, free_slots), 0)]
+                 if r.plen > prompt_pad]
+    if oversized:
+        with pytest.raises(ValueError):
+            sched.pack(q, free_slots)
+        # rejection is total: nothing popped, order preserved
+        assert q.pending == len(reqs)
+        assert [r.rid for r in q.peek(len(reqs))] == [r.rid for r in reqs]
+        return
+    admitted, ap, al, ag, ar, n_arr = sched.pack(q, free_slots)
+    # bound: never exceeds free slots, arrival slots, or pending
+    assert n_arr == len(admitted)
+    assert n_arr <= max(free_slots, 0)
+    assert n_arr <= arrival_slots
+    assert n_arr <= len(reqs)
+    assert n_arr == min(arrival_slots, max(free_slots, 0), len(reqs))
+    # conservation: admitted + still queued == original, in order
+    left = [r.rid for r in q.peek(q.pending)]
+    assert [r.rid for r in admitted] + left == [r.rid for r in reqs]
+    # the packed buffers describe exactly the admitted requests
+    for i, r in enumerate(admitted):
+        assert al[i] == r.plen and ag[i] == r.gen_target and ar[i] == r.rid
+        assert np.array_equal(ap[i, : r.plen], r.prompt)
+        assert not ap[i, r.plen:].any()
+    for i in range(len(admitted), arrival_slots):
+        assert ar[i] == -1
+
+
+@given(
+    plens=st.lists(st.integers(min_value=1, max_value=12), min_size=0,
+                   max_size=10),
+    arrival_slots=st.integers(min_value=1, max_value=6),
+    prompt_pad=st.integers(min_value=1, max_value=10),
+    free_slots=st.integers(min_value=0, max_value=8),
+)
+@settings(max_examples=200, deadline=None)
+def test_pack_properties(plens, arrival_slots, prompt_pad, free_slots):
+    _check_pack(plens, arrival_slots, prompt_pad, free_slots)
+
+
+def test_pack_properties_seeded_sweep():
+    """The same invariants without hypothesis: a seeded randomized sweep
+    plus the known corner cases (k=0, empty queue, all-oversized)."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        plens = rng.integers(1, 13, size=rng.integers(0, 11)).tolist()
+        _check_pack(plens, int(rng.integers(1, 7)), int(rng.integers(1, 11)),
+                    int(rng.integers(0, 9)))
+    _check_pack([], 4, 8, 4)            # empty queue
+    _check_pack([3, 3], 4, 8, 0)        # no free slots -> admits nothing
+    _check_pack([9, 9], 2, 8, 2)        # every candidate oversized
+    _check_pack([3, 9, 3], 3, 8, 3)     # oversized in the middle
+
+
+def test_pop_and_peek_clamp():
+    q, reqs = _mk_queue([2, 2, 2])
+    assert q.pop(0) == [] and q.pop(-1) == []
+    assert q.pending == 3
+    assert [r.rid for r in q.peek(99)] == [0, 1, 2]
+    assert [r.rid for r in q.pop(99)] == [0, 1, 2]
+    assert q.pop(5) == [] and q.peek(1) == []
+
+
+def test_requeue_front_preserves_order():
+    q, reqs = _mk_queue([2, 2, 2, 2])
+    taken = q.pop(2)
+    q.requeue_front(taken)
+    assert [r.rid for r in q.peek(4)] == [0, 1, 2, 3]
+    # evicted requests jump ahead of later arrivals
+    q.pop(1)
+    q.requeue_front([reqs[3]])
+    assert [r.rid for r in q.peek(3)] == [3, 1, 2]
+
+
+def test_drop_expired_only_past_deadline():
+    reqs = [Request(rid=i, prompt=np.ones(2, np.int32), gen_target=1,
+                    arrival_time=0.0, deadline=dl)
+            for i, dl in enumerate([0.5, float("inf"), 2.0])]
+    q = RequestQueue(reqs)
+    q.advance(1.0)
+    dropped = q.drop_expired(1.0)
+    assert [r.rid for r in dropped] == [0]
+    assert [r.rid for r in q.peek(3)] == [1, 2]
+    assert q.drop_expired(1.5) == []
+    assert [r.rid for r in q.drop_expired(2.0)] == [2]
